@@ -1,0 +1,49 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json) —
+the §Roofline section of EXPERIMENTS.md is generated from this."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+COLS = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+        "t_collective_s", "dominant", "useful_flops_ratio", "mfu_bound"]
+
+
+def load() -> list[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"],
+                         "dominant": rec.get("status", "?")})
+            continue
+        r = dict(rec["roofline"])
+        r["temp_GiB"] = round(
+            rec["memory"].get("temp_size_in_bytes", 0) / 2**30, 2)
+        r["args_GiB"] = round(
+            rec["memory"].get("argument_size_in_bytes", 0) / 2**30, 2)
+        r["coll_MiB"] = round(
+            rec["collectives"]["total_bytes"] / 2**20, 1)
+        rows.append(r)
+    return rows
+
+
+def main() -> None:
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts found — run: "
+              "python -m repro.launch.dryrun --all --both-meshes")
+        return
+    keys = COLS + ["temp_GiB", "args_GiB", "coll_MiB"]
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "-")) for k in keys))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""FTL solver performance: wall time + nodes explored across problem
+sizes (the paper's step-4 'solve' must be fast enough to run per layer at
+deployment time — Deeploy does this offline, we do it at trace time)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import ftl
+
+MB = 1 << 20
+
+
+CASES = [
+    ("vit-mlp-fused", lambda: ftl.fusion.mlp(
+        m=3072, d_model=768, d_ff=3072, fuse=True)),
+    ("qwen72b-mlp-shard", lambda: ftl.fusion.mlp(
+        m=65536, d_model=8192, d_ff=29568 // 16, gated=True, fuse=True)),
+    ("attention-32k", lambda: ftl.fusion.attention(
+        q_len=32768, kv_len=32768, head_dim=128, fuse=True)),
+    ("gemm-chain-4", lambda: ftl.fusion.gemm_chain(
+        m=8192, dims_kn=[4096, 4096, 4096, 4096], fuse=True)),
+]
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, make in CASES:
+        g = make()
+        t0 = time.perf_counter()
+        plan = ftl.solve(g, vmem_budget=96 * MB)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "case": name,
+            "dims": len(g.dims),
+            "solve_ms": round(1e3 * dt, 1),
+            "nodes": plan.nodes_explored,
+            "traffic_MiB": round(plan.traffic_bytes / MB, 1),
+            "vmem_MiB": round(plan.vmem_bytes / MB, 1),
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r[k]) for k in keys))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Hardware profiles for the benchmark runtime models.
+
+``SIRACUSA_*`` approximates the paper's evaluation platform (Siracusa
+RISC-V SoC [Prasad et al., JSSC]): 8×RV32 cluster + N-EUREKA NPU, 256 KiB
+L1 TCDM (software-managed, DMA-fed), on-chip L2 SRAM, off-chip L3 RAM
+behind a HyperBus-class link.  Constants are order-of-magnitude estimates
+from the Siracusa/PULP literature — the benchmark reports *relative*
+runtime reductions (the paper's Fig. 3 metric), which are insensitive to
+the absolute scale.
+
+``TPU_V5E`` is the repo's target (task-specified constants).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+KB = 1 << 10
+MB = 1 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTierHW:
+    """Software-managed scratchpad + two backing tiers (L2 on-chip, L3
+    off-chip overflow) — the paper's memory system shape.
+
+    ``gemm_on_accel``: GEMMs run on the accelerator while elementwise ops
+    (GeLU) stay on the scalar cluster — the Siracusa NPU split.  A fused
+    schedule can then overlap the cluster's epilogue with the NPU's next
+    tile; an unfused schedule serializes a whole extra kernel + its DMA
+    round trip (the paper's Fig. 3 asymmetry)."""
+    name: str
+    scratch_bytes: int          # L1 TCDM / VMEM (double-buffered by planner)
+    l2_bytes: int               # on-chip L2 capacity *free for activations*
+    l2_bw: float                # bytes/s L1<->L2 DMA
+    l3_bw: float                # bytes/s L1<->L3 (off-chip overflow)
+    macs_per_s: float           # peak MAC/s of the GEMM engine
+    ew_per_s: float             # elementwise (GeLU-class) elems/s, cluster
+    gemm_on_accel: bool = False
+    dma_setup_s: float = 2e-6   # per-transfer setup cost (drives DMA count)
+
+
+# 8 RV32 cores, 2 int8 MACs/cycle/core SIMD @ ~370 MHz, ~50 % kernel
+# efficiency -> ~3 GMAC/s; int8 GeLU ≈ LUT+requant ~10 cycles/elem.
+SIRACUSA_CLUSTER = TwoTierHW(
+    name="siracusa-cluster",
+    scratch_bytes=256 * KB, l2_bytes=2 * MB,
+    l2_bw=2.0e9, l3_bw=0.35e9, macs_per_s=3.0e9, ew_per_s=0.3e9)
+
+# + N-EUREKA NPU: ~64 GMAC/s int8; GeLU still on the cluster.
+SIRACUSA_NPU = TwoTierHW(
+    name="siracusa-cluster+npu",
+    scratch_bytes=256 * KB, l2_bytes=2 * MB,
+    l2_bw=2.0e9, l3_bw=0.35e9, macs_per_s=64.0e9, ew_per_s=0.3e9,
+    gemm_on_accel=True)
+
+# TPU v5e: VMEM-centric view of the same model.  bf16 MXU: 197 TFLOP/s =
+# 98.5 TMAC/s; HBM plays the L2 role; "L3" = remote chip HBM over ICI.
+TPU_V5E = TwoTierHW(
+    name="tpu-v5e",
+    scratch_bytes=96 * MB, l2_bytes=16 * (1 << 30),
+    l2_bw=819e9, l3_bw=50e9, macs_per_s=98.5e12, ew_per_s=0.9e12,
+    gemm_on_accel=True, dma_setup_s=1e-6)
+
+
+def _dma_time(hw: TwoTierHW, bytes_l2: float, bytes_l3: float,
+              transfers: int) -> float:
+    return (bytes_l2 / hw.l2_bw + bytes_l3 / hw.l3_bw
+            + transfers * hw.dma_setup_s)
+
+
+def runtime_model_unfused(hw: TwoTierHW, *, macs: int, ew_elems: int,
+                          gemm_traffic: int, gemm_dma: int,
+                          ew_traffic: int, ew_dma: int,
+                          intermediate_bytes: int) -> dict:
+    """Layer-per-layer: GEMM kernel then a separate elementwise kernel,
+    each overlapping its own DMA (double buffering); the intermediate
+    spills to L3 when it exceeds free L2 (the paper's ViT-MLP case)."""
+    spill = intermediate_bytes > hw.l2_bytes
+    # gemm writes the intermediate; ew reads+writes it
+    l3_g = intermediate_bytes if spill else 0
+    l3_e = 2 * intermediate_bytes if spill else 0
+    t_gemm = max(macs / hw.macs_per_s,
+                 _dma_time(hw, gemm_traffic - l3_g, l3_g, gemm_dma))
+    t_ew = max(ew_elems / hw.ew_per_s,
+               _dma_time(hw, ew_traffic - l3_e, l3_e, ew_dma))
+    return {"t_total_s": t_gemm + t_ew, "t_gemm_s": t_gemm, "t_ew_s": t_ew,
+            "l3_bytes": l3_g + l3_e}
+
+
+def runtime_model_fused(hw: TwoTierHW, *, macs: int, ew_elems: int,
+                        traffic: int, dma: int) -> dict:
+    """Fused: epilogue applied on the L1 tile.  With the NPU doing GEMMs
+    the cluster's epilogue overlaps; cluster-only serializes epilogue
+    cycles into the compute term.  No intermediate, no spill."""
+    t_ew = ew_elems / hw.ew_per_s
+    if hw.gemm_on_accel:
+        t_compute = max(macs / hw.macs_per_s, t_ew)
+    else:
+        t_compute = macs / hw.macs_per_s + t_ew
+    t = max(t_compute, _dma_time(hw, traffic, 0, dma))
+    return {"t_total_s": t, "t_compute_s": t_compute}

@@ -1,0 +1,116 @@
+"""Generate the data tables for EXPERIMENTS.md from dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.make_experiments [section]
+sections: dryrun | roofline | perf
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+BASE = os.path.join(HERE, "..", "results", "dryrun")
+OPT = os.path.join(HERE, "..", "results", "dryrun_opt")
+
+
+def load(d):
+    out = {}
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        out[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    return out
+
+
+def md_table(rows: list[dict], keys: list[str]) -> str:
+    out = ["| " + " | ".join(keys) + " |",
+           "|" + "|".join("---" for _ in keys) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(k, "–")) for k in keys) + " |")
+    return "\n".join(out)
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_section():
+    base = load(BASE)
+    rows = []
+    for (arch, shape, mesh), rec in sorted(base.items()):
+        ok = rec["status"] == "ok"
+        row = {"arch": arch, "shape": shape, "mesh": mesh,
+               "status": "ok" if ok else rec["status"][:46]}
+        if ok:
+            m = rec["memory"]
+            c = rec["collectives"]
+            row.update({
+                "compile_s": rec["compile_s"],
+                "args_GiB/chip": fmt_bytes(m["argument_size_in_bytes"]),
+                "temp_GiB/chip": fmt_bytes(m["temp_size_in_bytes"]),
+                "HLO_GFLOPs/chip": round(
+                    rec["cost"]["flops_per_chip"] / 1e9, 1),
+                "coll_GiB/chip": fmt_bytes(c["total_bytes"]),
+                "coll_ops": c["count"],
+            })
+        rows.append(row)
+    print(md_table(rows, ["arch", "shape", "mesh", "status", "compile_s",
+                          "args_GiB/chip", "temp_GiB/chip",
+                          "HLO_GFLOPs/chip", "coll_GiB/chip", "coll_ops"]))
+
+
+def roofline_section():
+    base = load(BASE)
+    rows = []
+    for (arch, shape, mesh), rec in sorted(base.items()):
+        if mesh != "16x16" or rec["status"] != "ok":
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": arch, "shape": shape,
+            "t_compute_s": r["t_compute_s"], "t_memory_s": r["t_memory_s"],
+            "t_collective_s": r["t_collective_s"],
+            "dominant": r["dominant"],
+            "MODEL_FLOPS": r["model_flops"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "mfu_bound": r["mfu_bound"],
+        })
+    print(md_table(rows, ["arch", "shape", "t_compute_s", "t_memory_s",
+                          "t_collective_s", "dominant", "MODEL_FLOPS",
+                          "useful_ratio", "mfu_bound"]))
+
+
+def perf_section():
+    base = load(BASE)
+    opt = load(OPT)
+    rows = []
+    for key, orec in sorted(opt.items()):
+        arch, shape, mesh = key
+        brec = base.get(key)
+        if not brec or brec["status"] != "ok" or orec["status"] != "ok":
+            continue
+        b, o = brec["roofline"], orec["roofline"]
+
+        def bound(r):
+            return max(r["t_compute_s"], r["t_memory_s"],
+                       r["t_collective_s"])
+
+        rows.append({
+            "arch": arch, "shape": shape, "mesh": mesh,
+            "base mem/coll (s)": f"{b['t_memory_s']:.2f} / "
+                                 f"{b['t_collective_s']:.2f}",
+            "opt mem/coll (s)": f"{o['t_memory_s']:.2f} / "
+                                f"{o['t_collective_s']:.2f}",
+            "bound speedup": f"{bound(b)/max(1e-9, bound(o)):.1f}x",
+            "mfu": f"{b['mfu_bound']:.3f} → {o['mfu_bound']:.3f}",
+        })
+    print(md_table(rows, ["arch", "shape", "mesh", "base mem/coll (s)",
+                          "opt mem/coll (s)", "bound speedup", "mfu"]))
+
+
+if __name__ == "__main__":
+    sec = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    {"dryrun": dryrun_section, "roofline": roofline_section,
+     "perf": perf_section}[sec]()

@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper figure/claim + the roofline
+table.  ``python -m benchmarks.run`` prints everything as CSV sections."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (bench_attention, bench_paper_mlp, bench_roofline,
+                   bench_solver, bench_tpu_mlp)
+
+    sections = [
+        ("paper-fig3: ViT MLP layer-per-layer vs FTL (Siracusa profiles)",
+         bench_paper_mlp.main),
+        ("ftl-at-scale: fused-vs-unfused MLP per assigned arch (TPU v5e)",
+         bench_tpu_mlp.main),
+        ("ftl-attention: fused-tiled attention traffic", bench_attention.main),
+        ("ftl-solver: branch-and-bound performance", bench_solver.main),
+        ("roofline: dry-run artifacts (per arch x shape x mesh)",
+         bench_roofline.main),
+    ]
+    for title, fn in sections:
+        print(f"\n### {title}")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:                  # noqa: BLE001
+            print(f"FAILED: {type(e).__name__}: {e}")
+            raise
+        print(f"# section took {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

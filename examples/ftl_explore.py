@@ -1,0 +1,58 @@
+"""Explore FTL plans interactively: budget sweeps, fusion decisions, and
+the sharding-constraint family.
+
+Shows, for a chosen MLP, how the optimal schedule changes with the VMEM
+budget — the paper's Fig. 3 regime (fusion wins) and the small-budget
+regime where the auto-planner rejects fusion (beyond-paper extension).
+
+Run:  PYTHONPATH=src python examples/ftl_explore.py [--m 8192] [--d 4096]
+      [--f 11008]
+"""
+import argparse
+
+from repro.core import ftl
+
+KB, MB = 1 << 10, 1 << 20
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=8192)
+    ap.add_argument("--d", type=int, default=4096)
+    ap.add_argument("--f", type=int, default=11008)
+    ap.add_argument("--gated", action="store_true")
+    args = ap.parse_args()
+
+    print(f"MLP m={args.m} d_model={args.d} d_ff={args.f} "
+          f"gated={args.gated}\n")
+    print(f"{'budget':>10} {'decision':>9} {'fused MiB':>10} "
+          f"{'unfused MiB':>12} {'reduction':>10} {'tile_m':>7} {'tile_f':>7}")
+    for budget in (512 * KB, 2 * MB, 8 * MB, 32 * MB, 96 * MB, 256 * MB):
+        out = ftl.plan_mlp(m=args.m, d_model=args.d, d_ff=args.f,
+                           gated=args.gated, vmem_budget=budget)
+        unf = sum(p.traffic_bytes for p in out.unfused)
+        if out.fused is None:
+            print(f"{budget/MB:9.1f}M {'infeasible':>9} {'-':>10} "
+                  f"{unf/MB:11.1f} {'-':>10}")
+            continue
+        red = 1 - out.fused.traffic_bytes / unf
+        print(f"{budget/MB:9.1f}M "
+              f"{'FUSE' if out.use_fused else 'split':>9} "
+              f"{out.fused.traffic_bytes/MB:10.1f} {unf/MB:11.1f} "
+              f"{100*red:9.1f}% {out.fused.tile('M'):7d} "
+              f"{out.fused.tile('F'):7d}")
+
+    # sharding constraints: the same MLP on a 16-way TP shard
+    print("\nwith d_ff sharded 16-way over the model axis "
+          "(FTL sharding-constraint family):")
+    if args.f % 16 == 0:
+        out = ftl.plan_mlp(m=args.m, d_model=args.d, d_ff=args.f // 16,
+                           gated=args.gated, vmem_budget=96 * MB)
+        print(f"  decision={'FUSE' if out.use_fused else 'split'}; "
+              f"{out.comparison.summary() if out.comparison else ''}")
+    else:
+        print("  d_ff not divisible by 16 — planner keeps it whole")
+
+
+if __name__ == "__main__":
+    main()

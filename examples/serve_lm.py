@@ -1,0 +1,18 @@
+"""Serving example: continuous-batching engine over a reduced model.
+
+Admits a queue of prompt requests into fixed decode slots, prefills each
+(splicing its KV cache into the batch cache), then decodes all active
+slots in lock-step — the serving pattern the decode dry-run cells lower
+at production shape.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "llama3.2-3b", "--reduced",
+                "--requests", "6", "--slots", "3", "--prompt-len", "12",
+                "--max-new", "12", "--max-seq", "64"] + sys.argv[1:]
+    main()

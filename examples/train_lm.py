@@ -1,0 +1,82 @@
+"""End-to-end training driver example (deliverable b).
+
+Trains a ~100M-param llama-style LM on the deterministic synthetic bigram
+stream with the full production stack: grad-accum train step, AdamW +
+warmup-cosine, async checkpointing, auto-resume, straggler monitoring.
+
+The default preset is CPU-sized so this runs here; ``--preset 100m`` is
+the real config (a few hundred steps on a v5e slice: point --mesh at it
+via launch/train.py, which shares this code path).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 60]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim import OptConfig
+from repro.runtime import LoopConfig, TrainLoop
+from repro.train import steps as S
+
+PRESETS = {
+    # ~100M params: the deliverable's end-to-end scale (for real hardware)
+    "100m": dict(n_layers=12, d_model=512, n_heads=8, n_kv_heads=8,
+                 d_ff=2048, vocab_size=50304, batch=32, seq=512),
+    # CPU-sized smoke preset (~7M params)
+    "cpu": dict(n_layers=4, d_model=192, n_heads=4, n_kv_heads=4,
+                d_ff=512, vocab_size=8192, batch=8, seq=128),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="cpu", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"example-{args.preset}", family="dense",
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"],
+        vocab_size=p["vocab_size"], mlp_act="silu", mlp_gated=True,
+        tie_embeddings=True, dtype="float32", remat=False)
+
+    from repro.models.model import count_params
+    print(f"model: {count_params(cfg)/1e6:.1f}M params")
+
+    data = SyntheticLM(
+        DataConfig(vocab_size=cfg.vocab_size, global_batch=p["batch"],
+                   seq_len=p["seq"], kind="bigram", noise=4),
+        process_index=0, process_count=1)
+
+    state = S.init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(S.make_train_step(
+        cfg, None,
+        OptConfig(peak_lr=3e-3, warmup_steps=10, decay_steps=args.steps),
+        accum=2))
+
+    loop = TrainLoop(
+        LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=25, log_every=10),
+        step,
+        lambda i: {k: jnp.asarray(v) for k, v in data.batch_at(i).items()},
+        state,
+        on_metrics=lambda s, m: print(
+            f"step {s:4d}  loss {m['loss']:.4f}  "
+            f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.1e}", flush=True),
+    )
+    loop.run()
+    last = loop.metrics_log[-1]
+    print(f"\nfinal loss {last['loss']:.4f} "
+          f"(entropy floor {data.optimal_nll():.4f}); "
+          f"straggler flags: {len(loop.monitor.flagged_steps)}")
+
+
+if __name__ == "__main__":
+    main()

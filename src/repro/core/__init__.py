@@ -1,0 +1,4 @@
+"""Core: the paper's primary contribution (Fused-Tiled Layers)."""
+from . import ftl
+
+__all__ = ["ftl"]

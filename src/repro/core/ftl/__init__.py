@@ -1,0 +1,31 @@
+"""Fused-Tiled Layers (FTL) — the paper's contribution as a JAX library.
+
+Pipeline (paper Fig. 1):
+  step 1  ir.py          dim variables per tensor dimension
+  step 2  constraints.py geometric / kernel-policy / performance constraints
+  step 3  fusion.py      select consecutive layers, bind shared dims
+  step 4  solver.py      solve the joint constraint-optimization problem
+
+Artifacts: plan.TilePlan (tiles + grid + cost report) consumed by
+  * src/repro/kernels/*  — Pallas TPU kernels (BlockSpecs from the plan)
+  * executor_xla.py      — portable lax.scan tiling executor
+"""
+from . import auto, constraints, cost, executor_xla, fusion, ir, plan, solver
+from .auto import MLPPlanOutcome, plan_attention, plan_mlp
+from .constraints import build_dim_constraints
+from .cost import CostReport, evaluate
+from .fusion import attention, gemm_act, gemm_chain, mlp
+from .ir import Dim, FusionGroup, KernelPolicy, OpNode, Role, TensorSpec
+from .plan import FusionComparison, TilePlan, compare
+from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError, solve
+
+__all__ = [
+    "Dim", "FusionGroup", "KernelPolicy", "OpNode", "Role", "TensorSpec",
+    "CostReport", "TilePlan", "FusionComparison",
+    "attention", "gemm_act", "gemm_chain", "mlp",
+    "build_dim_constraints", "evaluate", "solve", "compare",
+    "DEFAULT_VMEM_BUDGET", "InfeasibleError",
+    "MLPPlanOutcome", "plan_attention", "plan_mlp",
+    "auto", "constraints", "cost", "executor_xla", "fusion", "ir", "plan",
+    "solver",
+]

@@ -1,0 +1,122 @@
+"""Automatic fusion selection — beyond-paper extension.
+
+The paper fuses a manually chosen chain.  At framework level we plan BOTH
+schedules (fused, layer-per-layer) with the same solver and pick the one
+with lower modeled HBM traffic.  This matters because fusion is *not*
+always a win: when weights dominate and VMEM is scarce, the joint tiling
+constraints can force weight revisits that exceed the intermediate savings
+(see tests/test_ftl_solver.py::test_fusion_not_always_wins).
+
+Plans are cached per (shape, dtype, budget, sharding) — they are static
+compile-time artifacts, exactly like Deeploy's generated schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping
+
+from . import fusion
+from .plan import FusionComparison, TilePlan, compare
+from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError, solve
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPPlanOutcome:
+    fused: TilePlan | None
+    unfused: tuple[TilePlan, ...]
+    comparison: FusionComparison | None
+    use_fused: bool
+    partial: tuple[TilePlan, ...] = ()
+    schedule: str = ""               # 'fused' | 'partial' | 'unfused'
+
+    @property
+    def chosen_traffic(self) -> int:
+        if self.schedule == "fused" or (not self.schedule and self.use_fused):
+            return self.fused.traffic_bytes
+        if self.schedule == "partial":
+            return sum(p.traffic_bytes for p in self.partial)
+        return sum(p.traffic_bytes for p in self.unfused)
+
+
+def _freeze(d: Mapping[str, int] | None):
+    return tuple(sorted(d.items())) if d else None
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_mlp_cached(
+    m: int,
+    d_model: int,
+    d_ff: int,
+    dtype: str,
+    gated: bool,
+    act: str,
+    vmem_budget: int,
+    sharded: tuple | None,
+) -> MLPPlanOutcome:
+    sharded_sizes = dict(sharded) if sharded else None
+    kw = dict(m=m, d_model=d_model, d_ff=d_ff, dtype=dtype, gated=gated, act=act)
+    unfused = tuple(
+        solve(g, vmem_budget=vmem_budget, sharded_sizes=sharded_sizes)
+        for g in fusion.mlp(fuse=False, **kw)
+    )
+    # partial schedule: GEMM+act fused (the paper's op), GEMM2 separate
+    try:
+        partial = tuple(
+            solve(g, vmem_budget=vmem_budget, sharded_sizes=sharded_sizes)
+            for g in fusion.mlp_partial(**kw)
+        )
+    except InfeasibleError:
+        partial = ()
+    try:
+        fused = solve(
+            fusion.mlp(fuse=True, **kw),
+            vmem_budget=vmem_budget,
+            sharded_sizes=sharded_sizes,
+        )
+    except InfeasibleError:
+        fused = None
+    cands: dict[str, int] = {
+        "unfused": sum(p.traffic_bytes for p in unfused)}
+    if partial:
+        cands["partial"] = sum(p.traffic_bytes for p in partial)
+    if fused is not None:
+        cands["fused"] = fused.traffic_bytes
+    schedule = min(cands, key=cands.get)
+    cmp = compare(fused, unfused) if fused is not None else None
+    return MLPPlanOutcome(fused, unfused, cmp,
+                          use_fused=schedule == "fused",
+                          partial=partial, schedule=schedule)
+
+
+def plan_mlp(
+    *,
+    m: int,
+    d_model: int,
+    d_ff: int,
+    dtype: str = "bfloat16",
+    gated: bool = False,
+    act: str = "gelu",
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    sharded_sizes: Mapping[str, int] | None = None,
+) -> MLPPlanOutcome:
+    """Plan an MLP; returns fused + baseline plans and the auto decision."""
+    return _plan_mlp_cached(
+        m, d_model, d_ff, dtype, gated, act, vmem_budget, _freeze(sharded_sizes)
+    )
+
+
+@functools.lru_cache(maxsize=512)
+def plan_attention(
+    *,
+    q_len: int,
+    kv_len: int,
+    head_dim: int,
+    dtype: str = "bfloat16",
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> TilePlan:
+    return solve(
+        fusion.attention(q_len=q_len, kv_len=kv_len, head_dim=head_dim,
+                         dtype=dtype),
+        vmem_budget=vmem_budget,
+    )

@@ -1,0 +1,162 @@
+"""FTL traffic / memory cost model.
+
+Models exactly what the paper's Fig. 3 measures on Siracusa: total bytes
+moved between the software-managed fast memory (VMEM here, L1 there) and
+the backing store (HBM here, L2/L3 there), plus the DMA-transfer count.
+
+Traffic model
+-------------
+Given a tile assignment and a *grid order* (outermost → innermost), a tensor
+``T`` is re-fetched every time a grid dim **outside** ``dims(T)`` that is
+**outer** than T's innermost grid dim advances (the Pallas pipeline — like
+Deeploy's DMA scheduler — skips the copy while T's block index is
+unchanged).  Hence::
+
+    fetches(T) = Π_{g ∈ dims(T)∩grid} n(g) · Π_{g ∉ dims(T), g outer than
+                 innermost grid dim of T} n(g)
+    traffic(T) = bytes_tile(T) · fetches(T)
+               = bytes_full(T) · revisit(T)
+
+Contraction grid dims are forced innermost so outputs accumulate in VMEM and
+are written exactly once (kernel-policy: ``contract_accumulate``).
+
+Intermediates of a fused group contribute **zero** HBM traffic — that is the
+paper's entire point — but do occupy VMEM (single-buffered: they are
+produced and consumed in-core).  Streamed HBM tensors are double-buffered.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Mapping, Sequence
+
+from .constraints import DimConstraint, accumulator_tensors
+from .ir import FusionGroup, Role, TensorSpec, dtype_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    traffic_bytes: int           # HBM<->VMEM total
+    dma_transfers: int           # number of block copies
+    vmem_bytes: int              # peak VMEM footprint (with double buffering)
+    grid: tuple[tuple[str, int], ...]   # (dim, n_tiles) outer->inner
+    per_tensor_traffic: dict[str, int]
+    macs: int
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return (2.0 * self.macs) / max(1, self.traffic_bytes)
+
+
+def n_tiles(size: int, tile: int) -> int:
+    return -(-size // tile)
+
+
+def vmem_usage(
+    group: FusionGroup,
+    tiles: Mapping[str, int],
+    cons: Mapping[str, DimConstraint],
+    *,
+    double_buffer: bool = True,
+) -> int:
+    total = 0
+    for t in group.tensors.values():
+        b = t.bytes_tile(tiles)
+        if t.role in (Role.INPUT, Role.WEIGHT, Role.OUTPUT):
+            total += b * (2 if double_buffer else 1)
+        elif t.role is Role.INTERMEDIATE:
+            total += b
+    for acc in accumulator_tensors(group, tiles, cons):
+        total += acc.bytes_tile(tiles)
+    return total
+
+
+def _revisit(
+    tensor: TensorSpec,
+    order: Sequence[str],
+    counts: Mapping[str, int],
+) -> int:
+    """Revisit factor for ``tensor`` under grid ``order`` (outer→inner)."""
+    tdims = set(tensor.dims)
+    # innermost grid position occupied by one of T's dims
+    inner_pos = -1
+    for i, g in enumerate(order):
+        if g in tdims:
+            inner_pos = i
+    rev = 1
+    for i, g in enumerate(order):
+        if g not in tdims and i < inner_pos:
+            rev *= counts[g]
+    return rev
+
+
+def evaluate(
+    group: FusionGroup,
+    tiles: Mapping[str, int],
+    cons: Mapping[str, DimConstraint],
+    *,
+    order: Sequence[str] | None = None,
+    double_buffer: bool = True,
+) -> CostReport:
+    """Cost of an assignment; if ``order`` is None the best grid order is
+    chosen by enumeration over the tiled dims (contract dims pinned inner).
+    """
+    counts = {d: n_tiles(cons[d].size, tiles[d]) for d in tiles}
+    tiled = [d for d, c in counts.items() if c > 1]
+    contract = [d for d in tiled if cons[d].is_contract]
+    free = [d for d in tiled if not cons[d].is_contract]
+
+    hbm = group.hbm_tensors()
+
+    def traffic_for(ordr: Sequence[str]) -> tuple[int, int, dict[str, int]]:
+        per = {}
+        tot = 0
+        dma = 0
+        for t in hbm:
+            if t.role is Role.OUTPUT:
+                # accumulated in VMEM; written once per output block
+                rev = 1
+                fetches = 1
+                for d in t.dims:
+                    fetches *= counts.get(d, 1)
+            else:
+                rev = _revisit(t, ordr, counts)
+                fetches = rev
+                for d in t.dims:
+                    fetches *= counts.get(d, 1)
+            b = t.bytes_full({d: cons[d].size for d in t.dims}) * rev
+            per[t.name] = b
+            tot += b
+            dma += fetches
+        return tot, dma, per
+
+    if order is None:
+        best = None
+        # contract dims innermost (any relative order); permute free dims.
+        for perm in itertools.permutations(free) if free else [()]:
+            for cperm in itertools.permutations(contract) if contract else [()]:
+                ordr = list(perm) + list(cperm)
+                tot, dma, per = traffic_for(ordr)
+                key = (tot, dma)
+                if best is None or key < best[0]:
+                    best = (key, ordr, per)
+        (tot, dma), ordr, per = best
+    else:
+        ordr = list(order)
+        tot, dma, per = traffic_for(ordr)
+
+    return CostReport(
+        traffic_bytes=tot,
+        dma_transfers=dma,
+        vmem_bytes=vmem_usage(group, tiles, cons, double_buffer=double_buffer),
+        grid=tuple((d, counts[d]) for d in ordr),
+        per_tensor_traffic=per,
+        macs=group.total_macs(),
+    )
+
+
+def min_traffic_bound(group: FusionGroup, cons: Mapping[str, DimConstraint]) -> int:
+    """Optimistic lower bound: every HBM tensor moved exactly once."""
+    sizes = {d: c.size for d, c in cons.items()}
+    return sum(t.bytes_full(sizes) for t in group.hbm_tensors())

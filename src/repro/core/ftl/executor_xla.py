@@ -1,0 +1,98 @@
+"""Backend-agnostic execution of FTL plans via XLA scan tiling.
+
+The Pallas kernels (src/repro/kernels) are the TPU-native executors of a
+:class:`TilePlan`.  This module is the portable fallback: it executes the
+same fused schedule with ``lax.scan`` over token tiles, so the intermediate
+``(tile_m, d_ff)`` block is the only live instance of the MLP hidden state.
+
+What this buys on any backend (visible in ``memory_analysis()``):
+  * peak activation memory drops from O(M·d_ff) to O(tile_m·d_ff);
+  * at 32 k-token prefill of the large configs the full intermediate would
+    not even fit HBM per device (DESIGN.md §2's "L2 overflow" analogue).
+
+What it cannot buy (and the Pallas kernels can): XLA still spills each
+per-tile intermediate to HBM between the two GEMMs inside the loop body, so
+*traffic* is unchanged — exactly the paper's argument for explicit fusion
+on software-managed memories.  See DESIGN.md §9 for how this is reported.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .plan import TilePlan
+
+_ACTS: dict[str, Callable] = {
+    "gelu": partial(jax.nn.gelu, approximate=True),
+    "gelu_exact": partial(jax.nn.gelu, approximate=False),
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "identity": lambda x: x,
+}
+
+
+def activation(name: str) -> Callable:
+    try:
+        return _ACTS[name]
+    except KeyError as e:
+        raise ValueError(f"unknown activation {name!r}") from e
+
+
+def mlp_scan(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    wg: jax.Array | None = None,
+    b1: jax.Array | None = None,
+    b2: jax.Array | None = None,
+    *,
+    act: str = "gelu",
+    tile_m: int,
+    precision=jax.lax.Precision.DEFAULT,
+) -> jax.Array:
+    """Fused-schedule MLP: scan over tiles of the token dim.
+
+    ``x``: (..., M, K);  ``w1``/``wg``: (K, F);  ``w2``: (F, N).
+    ``tile_m`` must divide M (the FTL solver only emits divisors).
+    """
+    *lead, m, k = x.shape
+    if m % tile_m != 0:
+        raise ValueError(f"tile_m={tile_m} does not divide M={m}")
+    n_tiles = m // tile_m
+    act_fn = activation(act)
+
+    xt = x.reshape(*lead, n_tiles, tile_m, k)
+    # scan over the tile axis; moveaxis so scan's carry axis is leading.
+    xt = jnp.moveaxis(xt, -3, 0)
+
+    def body(_, xm):
+        h = jnp.matmul(xm, w1, precision=precision)
+        if b1 is not None:
+            h = h + b1
+        h = act_fn(h)
+        if wg is not None:
+            h = h * jnp.matmul(xm, wg, precision=precision)
+        y = jnp.matmul(h, w2, precision=precision)
+        if b2 is not None:
+            y = y + b2
+        return None, y.astype(x.dtype)
+
+    _, yt = jax.lax.scan(body, None, xt)
+    yt = jnp.moveaxis(yt, 0, -3)
+    return yt.reshape(*lead, m, w2.shape[-1])
+
+
+def mlp_from_plan(
+    plan: TilePlan,
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    wg: jax.Array | None = None,
+    *,
+    act: str = "gelu",
+) -> jax.Array:
+    """Execute an ``fusion.mlp`` plan with the scan executor (M tiling)."""
+    return mlp_scan(x, w1, w2, wg, act=act, tile_m=plan.tile("M"))

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (restartable, host-sharded)."""
+from .pipeline import DataConfig, SyntheticLM, make_batch_shapes
+
+__all__ = ["DataConfig", "SyntheticLM", "make_batch_shapes"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the FTL hot spots, with jnp oracles.
+
+Layout (per the repo convention):
+  <name>.py — pl.pallas_call + BlockSpec kernels
+  ops.py    — jit'd public wrappers (FTL-planned block sizes, backend dispatch)
+  ref.py    — pure-jnp oracles (also the layer-per-layer baseline)
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

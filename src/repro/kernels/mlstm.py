@@ -1,0 +1,110 @@
+"""mLSTM matrix-memory recurrence (xLSTM) as a fused-tiled Pallas kernel.
+
+State per head: C (Dh×Dh) matrix memory, n (Dh) normalizer, m scalar
+stabilizer — all VMEM-resident scratch carried across time chunks (grid dim,
+innermost).  The (T × Dh × Dh) state trajectory that a layer-per-layer
+schedule would materialize never exists: only h_t streams out.  This is the
+paper's fusion argument applied to a recurrence instead of a GEMM chain.
+
+Grid (B*H, t_chunks).  Within a chunk the recurrence is stepped with
+``fori_loop`` (sequential dependence); the TPU-native chunkwise-parallel
+formulation (matmul within chunk, recurrence across chunks) is implemented
+as `mlstm_chunkwise` — see §Perf in EXPERIMENTS.md for the comparison.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_kernel(scale: float):
+    def kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref, C_ref, n_ref, m_ref):
+        tc = pl.program_id(1)
+
+        @pl.when(tc == 0)
+        def _init():
+            C_ref[...] = jnp.zeros_like(C_ref)
+            n_ref[...] = jnp.zeros_like(n_ref)
+            m_ref[...] = jnp.zeros_like(m_ref)
+
+        block_t = q_ref.shape[1]
+
+        def step(t, carry):
+            C, n, m = carry
+            qt = q_ref[0, t, :].astype(jnp.float32) * scale
+            kt = k_ref[0, t, :].astype(jnp.float32)
+            vt = v_ref[0, t, :].astype(jnp.float32)
+            it = i_ref[0, t].astype(jnp.float32)
+            ft = f_ref[0, t].astype(jnp.float32)
+
+            logf = jax.nn.log_sigmoid(ft)
+            m_new = jnp.maximum(logf + m, it)
+            i_ = jnp.exp(it - m_new)
+            f_ = jnp.exp(logf + m - m_new)
+
+            C = f_ * C + i_ * (vt[:, None] * kt[None, :])
+            n = f_ * n + i_ * kt
+
+            num = C @ qt
+            den = jnp.maximum(jnp.abs(jnp.dot(n, qt)), jnp.exp(-m_new))
+            h_ref[0, t, :] = (num / den).astype(h_ref.dtype)
+            return C, n, m_new
+
+        C, n, m = jax.lax.fori_loop(
+            0, block_t, step, (C_ref[...], n_ref[0], m_ref[0, 0])
+        )
+        C_ref[...] = C
+        n_ref[0] = n
+        m_ref[0, 0] = m
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def mlstm_scan(
+    q: jax.Array,      # (B, H, T, Dh)
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,  # (B, H, T)
+    f_pre: jax.Array,  # (B, H, T)
+    *,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, t, dh = q.shape
+    block_t = min(block_t, t)
+    if t % block_t:
+        raise ValueError(f"block_t must divide T={t}")
+    scale = dh ** -0.5
+
+    qf = q.reshape(b * h, t, dh)
+    kf = k.reshape(b * h, t, dh)
+    vf = v.reshape(b * h, t, dh)
+    if_ = i_pre.reshape(b * h, t)
+    ff = f_pre.reshape(b * h, t)
+
+    grid = (b * h, t // block_t)
+    out = pl.pallas_call(
+        _make_kernel(scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, dh), lambda bh, tt: (bh, tt, 0)),
+            pl.BlockSpec((1, block_t, dh), lambda bh, tt: (bh, tt, 0)),
+            pl.BlockSpec((1, block_t, dh), lambda bh, tt: (bh, tt, 0)),
+            pl.BlockSpec((1, block_t), lambda bh, tt: (bh, tt)),
+            pl.BlockSpec((1, block_t), lambda bh, tt: (bh, tt)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, dh), lambda bh, tt: (bh, tt, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, if_, ff)
+    return out.reshape(b, h, t, dh)

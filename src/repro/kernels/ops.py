@@ -1,0 +1,182 @@
+"""Public kernel API: FTL-planned, backend-dispatching wrappers.
+
+Every op here:
+  * asks the FTL solver for block sizes (kernel-policy constraints of the
+    specific Pallas dataflow are passed as ``whole_dims``),
+  * runs the Pallas kernel on TPU, or in interpret mode elsewhere,
+  * can be forced onto the jnp reference path (``backend='ref'``) — that is
+    the layer-per-layer baseline used across benchmarks.
+
+The plan lookup is cached (static shapes → static schedule, like Deeploy).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ftl
+
+from . import ref as _ref
+from .flash_attention import flash_attention as _flash
+from .fused_mlp import fused_mlp as _fused_mlp
+from .gemm import gemm as _gemm
+from .gemm_gelu import gemm_act as _gemm_act
+from .mlstm import mlstm_scan as _mlstm
+from .rg_lru import rg_lru_scan as _rg_lru
+
+Backend = Literal["auto", "pallas", "ref"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _resolve(backend: Backend) -> str:
+    if backend == "auto":
+        # Pallas on TPU; the jnp path elsewhere (interpret mode is for
+        # validation, not production CPU execution).
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# planned block sizes
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=512)
+def plan_mlp_blocks(
+    m: int, k: int, f: int, dtype: str, gated: bool, act: str,
+    vmem_budget: int = ftl.DEFAULT_VMEM_BUDGET,
+) -> tuple[int, int]:
+    """(block_m, block_f) for the fused_mlp kernel from the FTL solver."""
+    group = ftl.fusion.mlp(
+        m=m, d_model=k, d_ff=f, dtype=dtype, gated=gated, act=act, fuse=True
+    )
+    plan = ftl.solve(
+        group, vmem_budget=vmem_budget, whole_dims=frozenset({"K", "N"})
+    )
+    return plan.tile("M"), plan.tile("F")
+
+
+@functools.lru_cache(maxsize=512)
+def plan_gemm_blocks(
+    m: int, k: int, n: int, dtype: str, act: str | None,
+    vmem_budget: int = ftl.DEFAULT_VMEM_BUDGET,
+) -> tuple[int, int, int]:
+    """(block_m, block_n, block_k) for gemm / gemm_act kernels."""
+    if act is None:
+        group = ftl.fusion.gemm_chain(m=m, dims_kn=[k, n], dtype=dtype)
+    else:
+        group = ftl.fusion.gemm_act(m=m, k=k, n=n, dtype=dtype, act=act)
+    plan = ftl.solve(group, vmem_budget=vmem_budget)
+    dims = plan.tiles
+    bm = dims.get("M", m)
+    bk = dims.get("K", dims.get("K0", k))
+    bn = dims.get("F", dims.get("K1", n))
+    return bm, bn, bk
+
+
+@functools.lru_cache(maxsize=512)
+def plan_attention_blocks(
+    tq: int, tk: int, dh: int, dtype: str,
+    vmem_budget: int = ftl.DEFAULT_VMEM_BUDGET,
+) -> tuple[int, int]:
+    """(block_q, block_k) for flash attention; Tk is re-tiled if the solver
+    kept it whole (its VMEM model allows a whole-row S tile; the kernel
+    streams Tk for the online softmax)."""
+    plan = ftl.plan_attention(q_len=tq, kv_len=tk, head_dim=dh, dtype=dtype,
+                              vmem_budget=vmem_budget)
+    bq = plan.tile("Tq")
+    bk = min(plan.tile("Tk"), max(512, bq))
+    while tk % bk:
+        bk //= 2
+    return bq, max(bk, 1)
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def gemm(x, w, *, backend: Backend = "auto"):
+    if _resolve(backend) == "ref":
+        return _ref.gemm(x, w)
+    bm, bn, bk = plan_gemm_blocks(x.shape[0], x.shape[1], w.shape[1],
+                                  str(x.dtype), None)
+    return _gemm(x, w, block_m=bm, block_n=bn, block_k=bk,
+                 interpret=_interpret())
+
+
+def gemm_act(x, w, b=None, *, act: str = "gelu", backend: Backend = "auto"):
+    """The paper's benchmark op."""
+    if _resolve(backend) == "ref":
+        return _ref.gemm_act(x, w, b, act=act)
+    bm, bn, bk = plan_gemm_blocks(x.shape[0], x.shape[1], w.shape[1],
+                                  str(x.dtype), act)
+    return _gemm_act(x, w, b, act=act, block_m=bm, block_n=bn, block_k=bk,
+                     interpret=_interpret())
+
+
+def fused_mlp(x, w1, w2, wg=None, b1=None, b2=None, *, act: str = "gelu",
+              backend: Backend = "auto"):
+    """Full fused MLP; x may have leading batch dims (flattened internally)."""
+    if _resolve(backend) == "ref":
+        return _ref.mlp(x, w1, w2, wg, b1, b2, act=act)
+    *lead, m, k = x.shape
+    xf = x.reshape(-1, k)
+    bm, bf = plan_mlp_blocks(xf.shape[0], k, w1.shape[1], str(x.dtype),
+                             wg is not None, act)
+    y = _fused_mlp(xf, w1, w2, wg, b1, b2, act=act, block_m=bm, block_f=bf,
+                   interpret=_interpret())
+    return y.reshape(*lead, m, w2.shape[1])
+
+
+# XLA-path attention schedule: 'naive' materializes the (Tq, Tk) scores
+# (the layer-per-layer baseline); 'blockwise' runs the FTL schedule via
+# lax.scan (ref.attention_blockwise) above the length threshold.  §Perf
+# toggles this to measure the fused-tiled schedule's effect on the
+# compiled dry-run.
+_XLA_ATTN = {"mode": "naive", "min_len": 2048}
+
+
+def set_xla_attention(mode: str, *, min_len: int = 2048) -> None:
+    assert mode in ("naive", "blockwise"), mode
+    _XLA_ATTN["mode"] = mode
+    _XLA_ATTN["min_len"] = min_len
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              q_offset: int = 0, backend: Backend = "auto"):
+    if _resolve(backend) == "ref":
+        tk = k.shape[2]
+        if _XLA_ATTN["mode"] == "blockwise" and tk >= _XLA_ATTN["min_len"]:
+            _, bk = plan_attention_blocks(q.shape[2], tk, q.shape[3],
+                                          str(q.dtype))
+            return _ref.attention_blockwise(
+                q, k, v, causal=causal, window=window, q_offset=q_offset,
+                block_k=max(bk, 1024))
+        return _ref.attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset)
+    bq, bk = plan_attention_blocks(q.shape[2], k.shape[2], q.shape[3],
+                                   str(q.dtype))
+    return _flash(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                  block_q=bq, block_k=bk, interpret=_interpret())
+
+
+def rg_lru(x, a, h0=None, *, backend: Backend = "auto"):
+    if _resolve(backend) == "ref":
+        return _ref.rg_lru_scan(x, a, h0)
+    return _rg_lru(x, a, h0, interpret=_interpret())
+
+
+def mlstm(q, k, v, i_pre, f_pre, *, backend: Backend = "auto",
+          return_state: bool = False):
+    if return_state:
+        # prefill handoff needs the final (C, n, m); the scan ref provides it
+        # (kernel extension tracked as a §Perf item).
+        return _ref.mlstm_scan(q, k, v, i_pre, f_pre, return_state=True)
+    if _resolve(backend) == "ref":
+        return _ref.mlstm_scan(q, k, v, i_pre, f_pre)
+    return _mlstm(q, k, v, i_pre, f_pre, interpret=_interpret())

@@ -1,0 +1,88 @@
+"""RG-LRU gated linear recurrence (Griffin / RecurrentGemma) as a
+fused-tiled Pallas kernel.
+
+``h_t = a_t * h_{t-1} + x_t`` over time, per channel.  The FTL view: time is
+chunked (grid dim, innermost) and channels tiled; the recurrent state is the
+VMEM-resident intermediate carried across time chunks — the full (B, T, D)
+state trajectory streams out, but the *carry* never bounces through HBM
+between chunks (the layer-per-layer analogue would run chunk-sized scans and
+materialize the carry in HBM each time).
+
+Grid (B, d_tiles, t_chunks), t innermost; state scratch (1, block_d) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, h0_ref, h_ref, hT_ref, state_ref):
+    tc = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(tc == 0)
+    def _init():
+        state_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    block_t = x_ref.shape[1]
+
+    def step(i, h):
+        xt = x_ref[0, i, :].astype(jnp.float32)
+        at = a_ref[0, i, :].astype(jnp.float32)
+        h = at * h + xt
+        h_ref[0, i, :] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, state_ref[0])
+    state_ref[0] = h
+
+    @pl.when(tc == nt - 1)
+    def _final():
+        hT_ref[...] = state_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_d", "interpret")
+)
+def rg_lru_scan(
+    x: jax.Array,    # (B, T, D) pre-gated input
+    a: jax.Array,    # (B, T, D) decay gates in (0, 1)
+    h0: jax.Array | None = None,   # (B, D)
+    *,
+    block_t: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b, t, d = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+    block_t = min(block_t, t)
+    block_d = min(block_d, d)
+    if t % block_t or d % block_d:
+        raise ValueError(f"blocks must divide dims {(t, d)}")
+    grid = (b, d // block_d, t // block_t)
+
+    h, hT = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda bb, dd, tt: (bb, tt, dd)),
+            pl.BlockSpec((1, block_t, block_d), lambda bb, dd, tt: (bb, tt, dd)),
+            pl.BlockSpec((1, block_d), lambda bb, dd, tt: (bb, dd)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda bb, dd, tt: (bb, tt, dd)),
+            pl.BlockSpec((1, block_d), lambda bb, dd, tt: (bb, dd)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, d), x.dtype),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(x, a, h0.astype(jnp.float32))
+    return h, hT

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets the 512-device XLA flag before
+any jax initialization; tests/benches see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 dual-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests, elastic restarts, PP experiments)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int | None = None, n_model: int = 1):
+    """Small mesh over however many (host) devices exist — test helper."""
+    n = jax.device_count()
+    if n_data is None:
+        n_data = n // n_model
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,17 @@
+"""Model zoo: shared layers + per-family blocks + full model assembly."""
+from . import layers, model, moe, recurrent
+from .model import (
+    count_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_shapes,
+    prefill,
+)
+
+__all__ = [
+    "layers", "model", "moe", "recurrent",
+    "init_params", "forward", "prefill", "decode_step", "init_cache",
+    "param_shapes", "count_params",
+]

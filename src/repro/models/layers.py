@@ -1,0 +1,353 @@
+"""Shared layers for the architecture zoo: norms, RoPE, GQA attention
+(training + cached decode, full/local/cross), and the MLP with FTL as a
+first-class execution mode.
+
+Parameters are plain nested dicts of jnp arrays; every layer is a pure
+function ``f(cfg, params, x, ...)`` so the zoo composes under pjit/remat
+without a framework dependency.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ftl import executor_xla
+from repro.distributed.act_sharding import constrain
+from repro.kernels import ops, ref
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool, dtype,
+                scale: float | None = None) -> Params:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+               ).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_norm(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm(p: Params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freqs[None, None]
+    else:
+        ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None]
+    cos = jnp.cos(ang)[:, :, None, :]     # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, key, *, cross: bool = False) -> Params:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": init_linear(ks[0], d, h * dh, bias=cfg.qkv_bias, dtype=dt),
+        "wk": init_linear(ks[1], d, hk * dh, bias=cfg.qkv_bias, dtype=dt),
+        "wv": init_linear(ks[2], d, hk * dh, bias=cfg.qkv_bias, dtype=dt),
+        "wo": init_linear(ks[3], h * dh, d, bias=cfg.mlp_bias, dtype=dt,
+                          scale=(h * dh) ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def attention_layer(
+    cfg,
+    p: Params,
+    x: jax.Array,                    # (B, S, D)
+    *,
+    positions: jax.Array,            # (S,)
+    causal: bool = True,
+    window: int | None = None,
+    kv_source: jax.Array | None = None,   # cross-attention context (B, Sk, D)
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = _split_heads(linear(p["wq"], x), h)
+    src = x if kv_source is None else kv_source
+    k = _split_heads(linear(p["wk"], src), hk)
+    v = _split_heads(linear(p["wv"], src), hk)
+    if use_rope and kv_source is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q.transpose(0, 2, 1, 3), "heads_q")
+    k = constrain(k.transpose(0, 2, 1, 3), "heads_kv")
+    v = constrain(v.transpose(0, 2, 1, 3), "heads_kv")
+    o = ops.attention(
+        q, k, v,
+        causal=causal and kv_source is None,
+        window=window,
+        backend="ref" if jax.default_backend() != "tpu" else "auto",
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], h * dh)
+    return linear(p["wo"], o)
+
+
+def attention_prefill(
+    cfg,
+    p: Params,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    kv_source: jax.Array | None = None,
+    use_rope: bool = True,
+    pad_to: int | None = None,
+) -> tuple[jax.Array, Params]:
+    """Full-sequence attention that also returns the decode cache.
+
+    Cache layout (B, S, Hk, Dh); for local windows a ring buffer of the
+    last ``window`` positions keyed by ``pos % window``.  ``pad_to``
+    right-pads the cache seq dim so decode steps can append in place
+    (decode DUS clamps out-of-range starts — an unpadded cache would
+    silently corrupt its last slot).
+    """
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = _split_heads(linear(p["wq"], x), h)
+    src = x if kv_source is None else kv_source
+    k = _split_heads(linear(p["wk"], src), hk)
+    v = _split_heads(linear(p["wv"], src), hk)
+    if use_rope and kv_source is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    o = ops.attention(
+        constrain(q.transpose(0, 2, 1, 3), "heads_q"),
+        constrain(k.transpose(0, 2, 1, 3), "heads_kv"),
+        constrain(v.transpose(0, 2, 1, 3), "heads_kv"),
+        causal=causal and kv_source is None,
+        window=window,
+        backend="ref" if jax.default_backend() != "tpu" else "auto",
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], h * dh)
+    out = linear(p["wo"], o)
+    s = k.shape[1]
+    if window is not None and s >= window:
+        tail_k, tail_v = k[:, -window:], v[:, -window:]
+        tail_pos = positions[-window:] % window
+        order = jnp.argsort(tail_pos)
+        cache = {"k": tail_k[:, order], "v": tail_v[:, order]}
+    else:
+        cache = {"k": k, "v": v}
+        target = pad_to
+        if window is not None:
+            # ring buffer must be exactly window-sized for decode
+            target = window
+        if target is not None and target > s:
+            pad = [(0, 0), (0, target - s), (0, 0), (0, 0)]
+            cache = {kk: jnp.pad(vv, pad) for kk, vv in cache.items()}
+    return out, cache
+
+
+def masked_decode_attention(
+    q: jax.Array,        # (B, H, 1, Dh)
+    k: jax.Array,        # (B, S, Hk, Dh)
+    v: jax.Array,        # (B, S, Hk, Dh)
+    mask: jax.Array,     # (S,) bool — valid cache slots
+) -> jax.Array:
+    b, hq = q.shape[0], q.shape[1]
+    hk = k.shape[2]
+    group = hq // hk
+    dh = q.shape[-1]
+    # keep K/V in storage dtype; accumulate in f32 via the MXU's
+    # preferred_element_type — casting inputs would materialize f32 copies
+    # of the whole cache (measured: 2.8 GB/step hoisted converts, §Perf).
+    qg = q.reshape(b, hk, group, dh)
+    kf = k.transpose(0, 2, 1, 3)                       # (B, Hk, S, Dh)
+    vf = v.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, kf,
+                   preferred_element_type=jnp.float32) * dh ** -0.5
+    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    pmax = s.max(-1, keepdims=True)
+    e = jnp.exp(s - pmax)
+    o = jnp.einsum("bhgs,bhsd->bhgd", e.astype(v.dtype), vf,
+                   preferred_element_type=jnp.float32)
+    o = o / e.sum(-1, keepdims=True)
+    return o.reshape(b, hq, 1, dh).astype(q.dtype)
+
+
+def attention_decode(
+    cfg,
+    p: Params,
+    x: jax.Array,                  # (B, 1, D)
+    cache: Params,                 # {"k": (B, S, Hk, Dh), "v": ..., ["cross_k"/"cross_v"]}
+    pos: jax.Array,                # scalar int32 — absolute position
+    *,
+    window: int | None = None,
+    cross: bool = False,
+    use_rope: bool = True,
+) -> tuple[jax.Array, Params]:
+    """One-token decode with KV cache (full or ring-buffered local)."""
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b = x.shape[0]
+    q = _split_heads(linear(p["wq"], x), h)          # (B, 1, H, Dh)
+
+    if cross:
+        # cross-attention: K/V precomputed at prefill, no rope, no update
+        k, v = cache["k"], cache["v"]
+        mask = jnp.ones((k.shape[1],), bool)
+        o = masked_decode_attention(q.transpose(0, 2, 1, 3), k, v, mask)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+        return linear(p["wo"], o), cache
+
+    k_new = _split_heads(linear(p["wk"], x), hk)     # (B, 1, Hk, Dh)
+    v_new = _split_heads(linear(p["wv"], x), hk)
+    if use_rope:
+        posv = pos[None] if pos.ndim == 0 else pos
+        q = rope(q, posv, cfg.rope_theta)
+        k_new = rope(k_new, posv, cfg.rope_theta)
+
+    s_max = cache["k"].shape[1]
+    if window is not None and s_max == window:
+        # ring buffer: slot j holds the latest position p ≤ pos with p%W==j
+        slot = pos % window
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, 1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, 1)
+        j = jnp.arange(window)
+        slot_pos = pos - ((pos - j) % window)
+        mask = slot_pos >= 0
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, 1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, 1)
+        kpos = jnp.arange(s_max)
+        mask = kpos <= pos
+        if window is not None:
+            mask &= kpos > pos - window
+    k = constrain(k, "kv_cache")
+    v = constrain(v, "kv_cache")
+    o = masked_decode_attention(q.transpose(0, 2, 1, 3), k, v, mask)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+    return linear(p["wo"], o), {"k": k, "v": v}
+
+
+def init_kv_cache(cfg, batch: int, seq: int, dtype, *, window: int | None = None
+                  ) -> Params:
+    hk, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    s = min(seq, window) if window is not None else seq
+    return {
+        "k": jnp.zeros((batch, s, hk, dh), dtype),
+        "v": jnp.zeros((batch, s, hk, dh), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP — FTL integration point (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": init_linear(ks[0], d, f, bias=cfg.mlp_bias, dtype=dt),
+        "w2": init_linear(ks[1], f, d, bias=cfg.mlp_bias, dtype=dt,
+                          scale=f ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.mlp_gated:
+        p["wg"] = init_linear(ks[2], d, f, bias=False, dtype=dt)
+    return p
+
+
+def mlp_layer(cfg, p: Params, x: jax.Array, *, ftl_mode: str | None = None
+              ) -> jax.Array:
+    """MLP with selectable FTL execution mode.
+
+    off   — layer-per-layer jnp: the hidden tensor is materialized (XLA
+            fuses the activation epilogue but not GEMM→GEMM).  Baseline.
+    fused — the fused_mlp Pallas kernel (FTL plan → BlockSpecs).
+    scan  — portable FTL schedule via lax.scan token tiling.
+    auto  — fused on TPU, scan elsewhere.
+    """
+    mode = ftl_mode if ftl_mode is not None else cfg.ftl_mode
+    wg = p.get("wg", {}).get("w")
+    b1 = p["w1"].get("b")
+    b2 = p["w2"].get("b")
+    if mode == "auto":
+        mode = "fused" if jax.default_backend() == "tpu" else "scan"
+    if mode == "off":
+        h = x @ p["w1"]["w"]
+        if b1 is not None:
+            h = h + b1
+        h = ref.act_fn(cfg.mlp_act)(h.astype(jnp.float32)).astype(x.dtype)
+        if wg is not None:
+            h = h * (x @ wg)
+        h = constrain(h, "ffn_hidden")
+        y = h @ p["w2"]["w"]
+        if b2 is not None:
+            y = y + b2
+        return y
+    if mode == "fused":
+        return ops.fused_mlp(
+            x, p["w1"]["w"], p["w2"]["w"], wg, b1, b2,
+            act=cfg.mlp_act, backend="pallas",
+        )
+    if mode == "scan":
+        s = x.shape[-2]
+        tile = s
+        for cand in (1024, 512, 256, 128):
+            if s % cand == 0 and cand < s:
+                tile = cand
+                break
+        return executor_xla.mlp_scan(
+            x, p["w1"]["w"], p["w2"]["w"], wg, b1, b2,
+            act=cfg.mlp_act, tile_m=tile,
+        )
+    raise ValueError(f"unknown ftl_mode {mode!r}")

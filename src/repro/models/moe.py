@@ -1,0 +1,202 @@
+"""Capacity-based Mixture-of-Experts (GShard-style routing, scatter
+dispatch) with optional shared experts.
+
+Dispatch is sort-free rank-within-expert scatter into a static
+(E, capacity, D) buffer (differentiable, GSPMD-shardable); overflow tokens
+are dropped (capacity_factor).  Per-expert FFNs run as batched einsums so
+HLO FLOPs reflect *active* compute — the MODEL_FLOPS/HLO_FLOPs roofline
+ratio stays honest.
+
+FTL note (DESIGN.md §7): the per-expert FFN is a GEMM→act→GEMM chain and
+is FTL-fusable per expert tile; the routing scatter/gather itself is
+data-dependent data movement and NOT fusable — a documented inapplicability.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain
+from repro.kernels import ref
+
+from .layers import init_linear, init_mlp, mlp_layer
+
+Params = dict[str, Any]
+
+
+def init_moe(cfg, key) -> Params:
+    d = cfg.d_model
+    f = cfg.moe_d_ff
+    e = cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5 / math.sqrt(2 * cfg.n_layers)
+    p: Params = {
+        "router": init_linear(ks[0], d, e, bias=False, dtype=jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale_in
+               ).astype(dt),
+        "w2": (jax.random.normal(ks[2], (e, f, d), jnp.float32) * scale_out
+               ).astype(dt),
+    }
+    if cfg.mlp_gated:
+        p["wg"] = (jax.random.normal(ks[3], (e, d, f), jnp.float32) * scale_in
+                   ).astype(dt)
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[4],
+                               d_ff=cfg.shared_d_ff * 1)
+    return p
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    c = int(math.ceil(n_tokens * cfg.n_experts_per_token / cfg.n_experts
+                      * cfg.capacity_factor))
+    return max(8, min(n_tokens, -(-c // 8) * 8))
+
+
+def moe_layer(cfg, p: Params, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).  Dispatch per cfg.moe_dispatch."""
+    if cfg.moe_dispatch == "grouped":
+        return moe_layer_grouped(cfg, p, x)
+    return moe_layer_scatter(cfg, p, x)
+
+
+def moe_layer_scatter(cfg, p: Params, x: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Global rank-within-expert scatter dispatch (baseline).
+
+    The expert-rank cumsum runs over ALL tokens — a cross-data-shard
+    sequential dependence that GSPMD can only honor by gathering; the
+    dry-run measures the resulting collective blow-up (§Perf)."""
+    b, s, d = x.shape
+    n = b * s
+    e = cfg.n_experts
+    k = cfg.n_experts_per_token
+    c = capacity(n, cfg)
+
+    xf = x.reshape(n, d)
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"])           # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                # (N, k)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- rank-within-expert (k slots per token, priority by k order) ----
+    flat_expert = expert_idx.reshape(-1)                           # (N*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)       # (N*k, E)
+    rank = jnp.cumsum(onehot, axis=0) - 1                          # rank per expert
+    flat_rank = jnp.take_along_axis(rank, flat_expert[:, None], 1)[:, 0]
+    keep = flat_rank < c
+
+    token_idx = jnp.repeat(jnp.arange(n), k)
+    dest_e = jnp.where(keep, flat_expert, e)      # e -> dropped (scatter mode=drop)
+    dest_c = jnp.where(keep, flat_rank, 0)
+
+    buf = jnp.zeros((e, c, d), x.dtype)
+    buf = buf.at[dest_e, dest_c].set(xf[token_idx], mode="drop")
+    buf = constrain(buf, "moe_buf")
+
+    # ---- per-expert FFN (batched einsum == grouped GEMM) ----------------
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    h = ref.act_fn(cfg.mlp_act)(h.astype(jnp.float32)).astype(x.dtype)
+    if "wg" in p:
+        h = h * jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    h = constrain(h, "moe_hidden")
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["w2"])
+
+    # ---- combine ---------------------------------------------------------
+    contrib = y_e[dest_e.clip(0, e - 1), dest_c]                   # (N*k, D)
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    weighted = contrib * gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    y = jnp.zeros((n, d), x.dtype).at[token_idx].add(weighted)
+
+    # ---- shared experts ----------------------------------------------------
+    if "shared" in p:
+        y = y + mlp_layer(cfg, p["shared"], xf[None]).reshape(n, d)
+
+    # ---- load-balance aux loss (Switch/GShard) -----------------------------
+    me = probs.mean(0)                                             # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_expert].add(
+        jnp.ones_like(flat_expert, jnp.float32)) / (n * k)
+    aux = e * jnp.sum(me * ce)
+
+    return y.reshape(b, s, d), aux
+
+
+def _n_groups(cfg, n_tokens: int) -> int:
+    g = cfg.moe_groups or 16
+    while n_tokens % g:
+        g //= 2
+    return max(1, g)
+
+
+def moe_layer_grouped(cfg, p: Params, x: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """GShard-style grouped dispatch (beyond-baseline, §Perf).
+
+    Tokens are split into G groups aligned with the data shards; routing
+    ranks are computed *within* each group, so no cross-shard cumsum
+    exists.  The (G, E, C, D) dispatch buffer is data-sharded on G and the
+    expert einsum consumes it expert-sharded on E — a (G ↔ E) resharding
+    GSPMD lowers to an all-to-all instead of all-gathers.
+    """
+    b, s, d = x.shape
+    n = b * s
+    e = cfg.n_experts
+    k = cfg.n_experts_per_token
+    g = _n_groups(cfg, n)
+    sg = n // g                                       # tokens per group
+    c = capacity(sg, cfg)
+
+    xg = x.reshape(g, sg, d)
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)   # (G, Sg, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- rank within (group, expert) — local to the group ---------------
+    flat_e = expert_idx.reshape(g, sg * k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (G, Sg*k, E)
+    rank = jnp.cumsum(onehot, axis=1) - 1
+    flat_rank = jnp.take_along_axis(rank, flat_e[..., None], 2)[..., 0]
+    keep = flat_rank < c
+    dest_e = jnp.where(keep, flat_e, e)               # E -> dropped
+    dest_c = jnp.where(keep, flat_rank, 0)
+
+    tok = jnp.repeat(jnp.arange(sg), k)[None].repeat(g, 0)    # (G, Sg*k)
+    gi = jnp.arange(g)[:, None].repeat(sg * k, 1)
+
+    buf = jnp.zeros((g, e, c, d), x.dtype)
+    buf = buf.at[gi, dest_e, dest_c].set(
+        jnp.take_along_axis(xg, tok[..., None], 1), mode="drop")
+    buf = constrain(buf, "moe_gbuf")
+
+    # ---- per-expert FFN: (G↔E) resharding is an all-to-all ---------------
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w1"])
+    h = ref.act_fn(cfg.mlp_act)(h.astype(jnp.float32)).astype(x.dtype)
+    if "wg" in p:
+        h = h * jnp.einsum("gecd,edf->gecf", buf, p["wg"])
+    h = constrain(h, "moe_ghidden")
+    y_e = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    y_e = constrain(y_e, "moe_gout")
+
+    # ---- combine (group-local gather) ------------------------------------
+    contrib = y_e[gi, dest_e.clip(0, e - 1), dest_c]          # (G, Sg*k, D)
+    contrib = jnp.where(keep[..., None], contrib, 0)
+    wts = gate_vals.reshape(g, sg * k)[..., None].astype(x.dtype)
+    y = jnp.zeros((g, sg, d), x.dtype).at[gi, tok].add(contrib * wts)
+
+    if "shared" in p:
+        y = y + mlp_layer(cfg, p["shared"], xg).reshape(g, sg, d)
+
+    # ---- aux loss (per group, averaged) -----------------------------------
+    me = probs.mean(1)                                        # (G, E)
+    ce = jnp.zeros((g, e), jnp.float32).at[gi, flat_e].add(
+        1.0 / (sg * k))
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,310 @@
+"""Recurrent temporal-mixing blocks: mLSTM + sLSTM (xLSTM) and the RG-LRU
+recurrent block (Griffin / RecurrentGemma).
+
+Sequence paths use the fused-tiled Pallas kernels (kernels/mlstm.py,
+kernels/rg_lru.py) on TPU and the jnp scan refs elsewhere; decode paths are
+single-step jnp updates on constant-size state — these architectures carry
+O(1)/O(window) decode state, which is why they run the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .layers import init_linear, init_norm, linear, norm
+
+Params = dict[str, Any]
+
+
+def _backend() -> str:
+    return "auto" if jax.default_backend() == "tpu" else "ref"
+
+
+# ===========================================================================
+# mLSTM (xLSTM) block
+# ===========================================================================
+
+def init_mlstm_block(cfg, key) -> Params:
+    d = cfg.d_model
+    e = cfg.xlstm_expand * d
+    h = cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    dh = e // h
+    # q/k/v are block-diagonal per head (xLSTM eq. 24's head-wise
+    # projections): (H, dh, dh) instead of dense (e, e).
+    def blockdiag(k):
+        return {"w": (jax.random.normal(k, (h, dh, dh), jnp.float32)
+                      * dh ** -0.5).astype(dt)}
+
+    return {
+        "norm": init_norm(d, cfg.norm, dt),
+        "up": init_linear(ks[0], d, 2 * e, bias=False, dtype=dt),
+        "wq": blockdiag(ks[1]),
+        "wk": blockdiag(ks[2]),
+        "wv": blockdiag(ks[3]),
+        "wi": init_linear(ks[4], e, h, bias=True, dtype=jnp.float32),
+        "wf": init_linear(ks[5], e, h, bias=True, dtype=jnp.float32),
+        "head_norm": init_norm(e, "rmsnorm", dt),
+        "down": init_linear(ks[6], e, d, bias=False, dtype=dt,
+                            scale=e ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _mlstm_qkvif(cfg, p, xin):
+    b, s, e = xin.shape
+    h = cfg.n_heads
+    dh = e // h
+    xh = xin.reshape(b, s, h, dh)
+    q = jnp.einsum("bshd,hde->bhse", xh, p["wq"]["w"])
+    k = jnp.einsum("bshd,hde->bhse", xh, p["wk"]["w"])
+    v = jnp.einsum("bshd,hde->bhse", xh, p["wv"]["w"])
+    i_pre = linear(p["wi"], xin.astype(jnp.float32)).transpose(0, 2, 1)
+    f_pre = linear(p["wf"], xin.astype(jnp.float32)).transpose(0, 2, 1) + 3.0
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_block(cfg, p: Params, x: jax.Array, *, return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D); residual added by caller."""
+    xn = norm(p["norm"], x, cfg.norm)
+    up = linear(p["up"], xn)
+    xin, z = jnp.split(up, 2, axis=-1)                # (B, S, E) each
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, p, xin)
+    state = None
+    if cfg.mlstm_chunk and not return_state:
+        # time-chunked remat (§Perf): O(T/chunk) saved state in backward
+        hcell = ref.mlstm_scan_chunked(q, k, v, i_pre, f_pre,
+                                       chunk=cfg.mlstm_chunk)
+    elif return_state:
+        hcell, state = ops.mlstm(q, k, v, i_pre, f_pre, backend=_backend(),
+                                 return_state=True)
+    else:
+        hcell = ops.mlstm(q, k, v, i_pre, f_pre, backend=_backend())
+    b, s = x.shape[0], x.shape[1]
+    hcell = hcell.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    hcell = norm(p["head_norm"], hcell, "rmsnorm")
+    out = hcell * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = linear(p["down"], out)
+    return (y, state) if return_state else y
+
+
+def init_mlstm_state(cfg, batch: int) -> Params:
+    e = cfg.xlstm_expand * cfg.d_model
+    h = cfg.n_heads
+    dh = e // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+def mlstm_block_decode(cfg, p: Params, x: jax.Array, state: Params
+                       ) -> tuple[jax.Array, Params]:
+    """x: (B, 1, D); constant-size state update."""
+    xn = norm(p["norm"], x, cfg.norm)
+    up = linear(p["up"], xn)
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, p, xin)
+    # single step (S=1): squeeze time
+    qt = q[:, :, 0].astype(jnp.float32)               # (B, H, Dh)
+    kt = k[:, :, 0].astype(jnp.float32)
+    vt = v[:, :, 0].astype(jnp.float32)
+    it = i_pre[:, :, 0]
+    ft = f_pre[:, :, 0]
+    dh = qt.shape[-1]
+    scale = dh ** -0.5
+
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + state["m"], it)
+    i_ = jnp.exp(it - m_new)[..., None]
+    f_ = jnp.exp(logf + state["m"] - m_new)[..., None]
+    C = f_[..., None] * state["C"] + i_[..., None] * (
+        vt[..., :, None] * kt[..., None, :])
+    nvec = f_ * state["n"] + i_ * kt
+    qs = qt * scale
+    num = jnp.einsum("bhij,bhj->bhi", C, qs)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhj,bhj->bh", nvec, qs)), jnp.exp(-m_new)
+    )[..., None]
+    hcell = (num / den).reshape(x.shape[0], 1, -1).astype(x.dtype)
+    hcell = norm(p["head_norm"], hcell, "rmsnorm")
+    out = hcell * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return linear(p["down"], out), {"C": C, "n": nvec, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM block (scalar memory, per-head recurrent weights)
+# ===========================================================================
+
+def init_slstm_block(cfg, key) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 10)
+    p = {"norm": init_norm(d, cfg.norm, dt)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = init_linear(ks[i], d, d, bias=True, dtype=dt)
+        # block-diagonal recurrent weights: (H, dh, dh)
+        p[f"r{g}"] = (jax.random.normal(ks[4 + i], (h, dh, dh), jnp.float32)
+                      * dh ** -0.5).astype(jnp.float32)
+    p["down"] = init_linear(ks[8], d, d, bias=False, dtype=dt,
+                            scale=d ** -0.5 / math.sqrt(2 * cfg.n_layers))
+    return p
+
+
+def init_slstm_state(cfg, batch: int) -> Params:
+    d = cfg.d_model
+    return {k: jnp.zeros((batch, d), jnp.float32) for k in ("h", "c", "n", "m")}
+
+
+def _slstm_step(cfg, p, state, xt):
+    """One sLSTM step; xt: (B, D) pre-activations input (already W x + b)."""
+    h_prev = state["h"]
+    b, d = h_prev.shape
+    hh = h_prev.reshape(b, cfg.n_heads, -1)
+
+    def rec(g):
+        return jnp.einsum("bhi,hij->bhj", hh, p[f"r{g}"]).reshape(b, d)
+
+    zt = jnp.tanh(xt["z"] + rec("z"))
+    it = xt["i"] + rec("i")
+    ft = xt["f"] + rec("f")
+    ot = jax.nn.sigmoid(xt["o"] + rec("o"))
+
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + state["m"], it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(logf + state["m"] - m_new)
+    c = f_ * state["c"] + i_ * zt
+    n = f_ * state["n"] + i_
+    h = ot * c / jnp.maximum(n, 1.0)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_block(cfg, p: Params, x: jax.Array, *, return_state: bool = False):
+    xn = norm(p["norm"], x, cfg.norm).astype(jnp.float32)
+    pre = {g: linear(p[f"w{g}"], xn) for g in ("z", "i", "f", "o")}
+    b, s, d = x.shape
+    state0 = init_slstm_state(cfg, b)
+
+    def step(state, xt):
+        new = _slstm_step(cfg, p, state, xt)
+        return new, new["h"]
+
+    xs = {g: jnp.moveaxis(v, 1, 0) for g, v in pre.items()}
+    stateT, hs = jax.lax.scan(step, state0, xs)
+    out = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = linear(p["down"], out)
+    return (y, stateT) if return_state else y
+
+
+def slstm_block_decode(cfg, p: Params, x: jax.Array, state: Params
+                       ) -> tuple[jax.Array, Params]:
+    xn = norm(p["norm"], x, cfg.norm).astype(jnp.float32)[:, 0]
+    pre = {g: linear(p[f"w{g}"], xn) for g in ("z", "i", "f", "o")}
+    new = _slstm_step(cfg, p, state, pre)
+    out = linear(p["down"], new["h"][:, None].astype(x.dtype))
+    return out, new
+
+
+# ===========================================================================
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ===========================================================================
+
+_LRU_C = 8.0
+
+
+def init_rec_block(cfg, key) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    # Λ init so a = exp(-c·softplus(Λ)·r) lands in (0.9, 0.999) at r≈0.5
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, w)) * 2.0 / _LRU_C))
+    return {
+        "norm": init_norm(d, cfg.norm, dt),
+        "wx": init_linear(ks[0], d, w, bias=False, dtype=dt),
+        "wy": init_linear(ks[1], d, w, bias=False, dtype=dt),
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32)
+                 * cfg.conv_width ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "wr": init_linear(ks[3], w, w, bias=True, dtype=dt),
+        "wi": init_linear(ks[4], w, w, bias=True, dtype=dt),
+        "lam": lam.astype(jnp.float32),
+        "out": init_linear(ks[5], w, d, bias=False, dtype=dt,
+                           scale=w ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv(xt: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv along time.  xt: (B, T, W); w: (K, W)."""
+    kw = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((xt.shape[0], kw - 1, xt.shape[2]), xt.dtype)
+    else:
+        pad = prev.astype(xt.dtype)
+    xp = jnp.concatenate([pad, xt], axis=1)
+    out = sum(
+        xp[:, i:i + xt.shape[1]] * w[i][None, None] for i in range(kw)
+    )
+    return out + b[None, None]
+
+
+def _lru_gates(p, xc):
+    r = jax.nn.sigmoid(linear(p["wr"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["wi"], xc).astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    # input normalization: sqrt(1 - a^2), from the Griffin paper
+    u = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * i * xc.astype(jnp.float32)
+    return a, u
+
+
+def rec_block(cfg, p: Params, x: jax.Array, *, return_state: bool = False):
+    xn = norm(p["norm"], x, cfg.norm)
+    xb = linear(p["wx"], xn)                                   # (B, T, W)
+    xc = _causal_conv(xb, p["conv"], p["conv_b"])
+    a, u = _lru_gates(p, xc)
+    h, hT = ops.rg_lru(u.astype(x.dtype), a.astype(x.dtype),
+                       backend=_backend())
+    gate = jax.nn.gelu(linear(p["wy"], xn).astype(jnp.float32))
+    out = (h.astype(jnp.float32) * gate).astype(x.dtype)
+    y = linear(p["out"], out)
+    if return_state:
+        state = {
+            "h": hT,
+            "conv": xb[:, -(cfg.conv_width - 1):].astype(jnp.float32),
+        }
+        return y, state
+    return y
+
+
+def init_rec_state(cfg, batch: int) -> Params:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    }
+
+
+def rec_block_decode(cfg, p: Params, x: jax.Array, state: Params
+                     ) -> tuple[jax.Array, Params]:
+    xn = norm(p["norm"], x, cfg.norm)
+    xb = linear(p["wx"], xn)                                   # (B, 1, W)
+    xc = _causal_conv(xb, p["conv"], p["conv_b"], prev=state["conv"])
+    a, u = _lru_gates(p, xc)
+    h = a[:, 0] * state["h"] + u[:, 0]
+    conv_new = jnp.concatenate(
+        [state["conv"][:, 1:], xb.astype(jnp.float32)], axis=1)
+    gate = jax.nn.gelu(linear(p["wy"], xn).astype(jnp.float32))
+    out = (h[:, None] * gate).astype(x.dtype)
+    return linear(p["out"], out), {"h": h, "conv": conv_new}

@@ -1,0 +1,11 @@
+"""Optimizer built from scratch (no optax dependency)."""
+from .adamw import (
+    OptConfig,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "lr_schedule",
+           "global_norm"]

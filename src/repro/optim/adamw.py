@@ -1,0 +1,103 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a
+warmup+cosine schedule — implemented from scratch in pure JAX.
+
+Optimizer moments are fp32 and inherit the parameter sharding (ZeRO-1
+falls out of FSDP: each device holds the moments of its param shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_schedule(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    """Linear warmup then cosine decay to ``min_lr_ratio``·peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(1, cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.decay_steps - cfg.warmup_steps), 0.0, 1.0)
+    floor = cfg.peak_lr * cfg.min_lr_ratio
+    cos = floor + (cfg.peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Params) -> Params:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms, biases, gates, 1-D params."""
+    names = [str(k.key) for k in path
+             if isinstance(k, jax.tree_util.DictKey)]
+    leaf = names[-1] if names else ""
+    if leaf in ("b", "scale", "bias", "xgate", "lam", "conv_b"):
+        return False
+    parent = names[-2] if len(names) > 1 else ""
+    if parent in ("ln1", "ln2", "lnx", "norm", "final_norm", "enc_norm",
+                  "head_norm"):
+        return False
+    return True
+
+
+def adamw_update(
+    grads: Params,
+    opt_state: Params,
+    params: Params,
+    step: jax.Array,
+    cfg: OptConfig,
+) -> tuple[Params, Params, dict[str, jax.Array]]:
+    """One AdamW step; returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(step, cfg)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(path, g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if _decay_mask(path):
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return new_p, m, v
+
+    triples = jax.tree_util.tree_map_with_path(
+        upd, grads, opt_state["m"], opt_state["v"], params)
+    new_params = jax.tree.map(lambda t3: t3[0], triples,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], triples,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], triples,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v}, metrics

@@ -1,0 +1,12 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from .analysis import (
+    HW,
+    CollectiveStats,
+    RooflineReport,
+    collective_bytes,
+    model_flops,
+    roofline,
+)
+
+__all__ = ["HW", "CollectiveStats", "RooflineReport", "collective_bytes",
+           "model_flops", "roofline"]

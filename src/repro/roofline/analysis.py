@@ -1,0 +1,276 @@
+"""Three-term roofline from the dry-run's compiled artifact.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` reports the **per-device** SPMD program
+(post-partitioning), so its flops/bytes are already per-chip.  Collective
+bytes are NOT in cost_analysis: we parse the compiled HLO text and sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.
+
+Hardware model (TPU v5e class, task-specified constants):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+MODEL_FLOPS uses the classic 6·N·D training estimate (2·N·D forward-only),
+with N = *active* params for MoE — the MODEL_FLOPS/HLO_FLOPs ratio then
+exposes remat recompute and redundant work in the compiled program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# hardware constants (TPU v5e class — task statement)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link
+    hbm_bytes: float = 16e9             # capacity per chip
+    vmem_bytes: float = 128 * 2**20
+
+
+DEFAULT_HW = HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+# 'bf16[8,128,4096]{2,1,0}' or 'f32[]'
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g.  '%ag = bf16[...] all-gather(bf16[...] %x), ...'
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\s*\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    if not dims:
+        return b
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n * b
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int
+    by_kind: dict[str, int]
+    count: int
+
+    def summary(self) -> str:
+        per = ", ".join(f"{k}={v/2**20:.1f}MiB"
+                        for k, v in sorted(self.by_kind.items()) if v)
+        return f"{self.total_bytes/2**20:.1f} MiB over {self.count} ops ({per})"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in (compiled or stable-HLO) text.
+
+    ``-start`` variants are counted; matching ``-done`` ops carry no
+    operands of their own shape class (their operand is the start token),
+    so double counting is avoided by skipping '-done'.
+    """
+    by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        kind, operands = m.group(1), m.group(2)
+        if "-done" in m.group(0).split("(")[0]:
+            continue
+        b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(operands))
+        if b:
+            by_kind[kind] += b
+            count += 1
+    return CollectiveStats(sum(by_kind.values()), by_kind, count)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def active_params(cfg) -> int:
+    """Parameter count weighted by activation fraction (MoE top-k/E)."""
+    from repro.models.model import count_params, param_shapes
+
+    total = count_params(cfg)
+    if not cfg.is_moe:
+        return total
+    # routed expert weight fraction
+    shapes = param_shapes(cfg)
+    import jax
+
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        names = [str(k.key) for k in path
+                 if hasattr(k, "key")]
+        if "moe" in names and any(n in ("w1", "w2", "wg") for n in names):
+            routed += math.prod(leaf.shape)
+    frac = cfg.n_experts_per_token / max(1, cfg.n_experts)
+    return total - routed + int(routed * frac)
+
+
+def _mixer_flops_fwd(cfg, shape) -> int:
+    """Forward FLOPs of the temporal mixers (not captured by 2·N·D):
+    attention score/value matmuls (causal halved, local capped at the
+    window, cross against the context length) and recurrent state updates.
+    An estimate — documented as such in EXPERIMENTS.md §Roofline."""
+    b, s = shape.global_batch, shape.seq_len
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    decode = shape.kind == "decode"
+    total = 0
+    for i in range(cfg.n_layers):
+        kind = cfg.block_kind(i)
+        if kind == "attn":
+            ctx = s if decode else s / 2
+            tok = 1 if decode else s
+            total += int(4 * b * h * dh * tok * ctx)
+        elif kind == "local":
+            w = cfg.local_window or s
+            ctx = min(s, w)
+            tok = 1 if decode else s
+            total += int(4 * b * h * dh * tok * ctx)
+        elif kind == "cross":
+            tok = 1 if decode else s
+            total += 4 * b * h * dh * tok * cfg.n_image_tokens
+        elif kind == "mlstm":
+            e = cfg.xlstm_expand * cfg.d_model
+            dhe = e // cfg.n_heads
+            tok = 1 if decode else s
+            # C update (Dh²) + numerator matvec (Dh²) per step per head
+            total += 6 * b * cfg.n_heads * dhe * dhe * tok
+        elif kind == "slstm":
+            d = cfg.d_model
+            dhh = d // cfg.n_heads
+            tok = 1 if decode else s
+            total += 8 * b * d * dhh * tok
+        elif kind == "rec":
+            w = cfg.lru_width or cfg.d_model
+            tok = 1 if decode else s
+            total += 12 * b * w * tok
+    if cfg.is_encoder_decoder and not decode:
+        f = cfg.encoder_seq
+        total += cfg.n_encoder_layers * 4 * b * h * dh * f * f // 2
+        total += cfg.n_layers * 4 * b * h * dh * s * f      # cross-attn
+    return total
+
+
+def model_flops(cfg, shape) -> int:
+    """6·N_active·D (train) / 2·N_active·D (forward), plus mixer terms."""
+    n = active_params(cfg)
+    mix = _mixer_flops_fwd(cfg, shape)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6 * n * tokens + 3 * mix
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * n * tokens + mix
+    # decode: one token per sequence
+    return 2 * n * shape.global_batch + mix
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: tuple[int, ...]
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_stats: CollectiveStats | None
+    model_flops_total: float
+    hw: HW = DEFAULT_HW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / self.hw.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time: overlapped terms → max()."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops × chips) — remat/redundancy waste."""
+        hlo_total = self.flops_per_chip * self.chips
+        return self.model_flops_total / max(1.0, hlo_total)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound (the score)."""
+        ideal = self.model_flops_total / (self.chips * self.hw.peak_flops)
+        return ideal / max(1e-12, self.t_bound)
+
+    def row(self) -> dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape,
+            "mesh": "x".join(map(str, self.mesh)), "chips": self.chips,
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "dominant": self.dominant,
+            "model_flops": f"{self.model_flops_total:.3e}",
+            "useful_flops_ratio": round(self.useful_flops_ratio, 3),
+            "mfu_bound": round(self.mfu_bound, 3),
+        }
+
+
+def roofline(
+    *, arch: str, shape, mesh_shape: tuple[int, ...],
+    cost: dict[str, Any], hlo_text: str | None,
+    model_flops_total: float, hw: HW = DEFAULT_HW,
+    coll_bytes: int | None = None,
+) -> RooflineReport:
+    chips = int(np.prod(mesh_shape))
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    if coll_bytes is None:
+        stats = collective_bytes(hlo_text or "")
+        coll_bytes = stats.total_bytes
+    else:
+        stats = None
+    return RooflineReport(
+        arch=arch, shape=shape.name if hasattr(shape, "name") else str(shape),
+        mesh=mesh_shape, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        coll_bytes_per_chip=float(coll_bytes),
+        coll_stats=stats, model_flops_total=model_flops_total, hw=hw)

@@ -1,0 +1,6 @@
+"""Fault-tolerant training runtime: auto-resume loop, preemption handling,
+straggler monitoring."""
+from .loop import LoopConfig, TrainLoop
+from .monitor import HeartbeatMonitor, StragglerMonitor
+
+__all__ = ["TrainLoop", "LoopConfig", "StragglerMonitor", "HeartbeatMonitor"]

@@ -1,0 +1,15 @@
+"""Training & serving steps: losses, grad-accum train_step, prefill/decode."""
+from .losses import cross_entropy
+from .steps import (
+    TrainState,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    train_state_shapes,
+)
+
+__all__ = [
+    "cross_entropy", "TrainState", "init_train_state", "train_state_shapes",
+    "make_train_step", "make_prefill_step", "make_decode_step",
+]

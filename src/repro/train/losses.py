@@ -1,0 +1,31 @@
+"""Losses.  Cross entropy is computed in fp32 with an explicit logsumexp so
+the (B, S, V) logits tensor can stay vocab-sharded over the ``model`` axis
+(GSPMD turns max/sum over V into per-shard reductions + tiny collectives —
+no all-gather of logits)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(
+    logits: jax.Array,        # (B, S, V)
+    labels: jax.Array,        # (B, S) int32
+    mask: jax.Array | None = None,    # (B, S) 0/1
+    *,
+    z_loss: float = 0.0,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Mean token NLL (+ optional z-loss stabilizer).  Returns (loss, aux)."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)          # (B, S)
+    pick = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - pick
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    tot = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / tot
+    acc = ((jnp.argmax(lg, -1) == labels) * mask).sum() / tot
+    return loss, {"nll": loss, "accuracy": acc, "tokens": tot}

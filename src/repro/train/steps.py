@@ -1,0 +1,219 @@
+"""Step builders: gradient-accumulation train_step and serve steps.
+
+``make_train_step`` returns an un-jitted pure function plus the sharding
+trees needed to pjit it; ``launch/dryrun.py`` lowers it AOT against
+ShapeDtypeStructs, ``launch/train.py``/tests jit and run it.
+
+Memory strategy for the big configs (DESIGN.md §6): the global batch is
+split into ``accum`` microbatches consumed by ``lax.scan``; each microbatch
+runs the remat'd model forward+backward, and fp32 gradients accumulate in
+the scan carry (sharded like the params, so grad memory == one fp32 param
+copy per device).  Compute/comm overlap: GSPMD overlaps the FSDP
+all-gather of layer i+1's params with layer i's compute inside the scanned
+layer body; the reduce-scatter of grads overlaps the backward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import compression
+from repro.distributed.act_sharding import use_policy
+from repro.distributed.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    dp_axes,
+    make_activation_policy,
+    param_pspecs,
+    to_shardings,
+)
+from repro.models import model as M
+from repro.optim import OptConfig, adamw_update, init_opt_state
+from repro.train.losses import cross_entropy
+
+Params = dict[str, Any]
+
+
+# ===========================================================================
+# train state
+# ===========================================================================
+
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    opt: Params                 # {"m": ..., "v": ...}
+    step: jax.Array             # int32 scalar
+    ef_error: Params | None = None    # error-feedback state (compression)
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt", "step", "ef_error"],
+    meta_fields=[])
+
+
+def init_train_state(cfg, key, *, compress: bool = False) -> TrainState:
+    params = M.init_params(cfg, key)
+    state = TrainState(
+        params=params,
+        opt=init_opt_state(params),
+        step=jnp.zeros((), jnp.int32),
+        ef_error=compression.init_error(params) if compress else None,
+    )
+    return state
+
+
+def train_state_shapes(cfg, *, compress: bool = False):
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg, compress=compress),
+        jax.random.PRNGKey(0))
+
+
+def state_pspecs(state_shape, mesh: Mesh, cfg):
+    """PartitionSpec tree for a TrainState: moments follow their params."""
+    pspec = param_pspecs(state_shape.params, mesh, cfg)
+    return TrainState(
+        params=pspec,
+        opt={"m": pspec, "v": pspec},
+        step=P(),
+        ef_error=None if state_shape.ef_error is None else pspec,
+    )
+
+
+# ===========================================================================
+# train step
+# ===========================================================================
+
+def make_loss_fn(cfg):
+    def loss_fn(params, batch):
+        logits, moe_aux = M.forward(cfg, params, batch)
+        labels = batch["tokens"][:, 1:]
+        loss, aux = cross_entropy(logits[:, :-1], labels, z_loss=1e-4)
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_weight * moe_aux
+            aux["moe_aux"] = moe_aux
+        return loss, aux
+
+    return loss_fn
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def sp(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+
+    return {k: sp(v) for k, v in batch.items()}
+
+
+def make_train_step(
+    cfg,
+    mesh: Mesh | None,
+    opt_cfg: OptConfig,
+    *,
+    accum: int = 1,
+    compress: bool = False,
+) -> Callable[[TrainState, dict], tuple[TrainState, dict]]:
+    """Build the (un-jitted) train step.  ``mesh=None`` → no sharding
+    constraints (CPU smoke tests)."""
+    loss_fn = make_loss_fn(cfg)
+    policy = make_activation_policy(mesh, cfg) if mesh is not None else None
+
+    def step_fn(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        with use_policy(policy):
+            grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+            if accum == 1:
+                (loss, aux), grads = grad_fn(state.params, batch)
+                grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            else:
+                micro = _split_microbatches(batch, accum)
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+                def accum_body(carry, mb):
+                    acc, loss_acc = carry
+                    (l, _a), g = grad_fn(state.params, mb)
+                    acc = jax.tree.map(
+                        lambda a, gi: a + gi.astype(jnp.float32) / accum,
+                        acc, g)
+                    return (acc, loss_acc + l / accum), None
+
+                (grads, loss), _ = jax.lax.scan(
+                    accum_body, (zero, jnp.float32(0.0)), micro)
+                aux = {}
+
+            ef_error = state.ef_error
+            if compress:
+                grads, ef_error = compression.ef_compress(grads, ef_error)
+
+            new_params, new_opt, om = adamw_update(
+                grads, state.opt, state.params, state.step, opt_cfg)
+            metrics = {"loss": loss, **om,
+                       **{k: v for k, v in aux.items() if v.ndim == 0}}
+            return TrainState(new_params, new_opt, state.step + 1,
+                              ef_error), metrics
+
+    return step_fn
+
+
+def train_step_shardings(cfg, mesh: Mesh, state_shape, batch_shape):
+    """(in_shardings, out_shardings) for pjit'ing the train step.
+
+    Metrics get a pytree-prefix replicated sharding (scalars)."""
+    sspec = state_pspecs(state_shape, mesh, cfg)
+    bspec = batch_pspecs(batch_shape, mesh)
+    in_sh = (to_shardings_tree(sspec, mesh), to_shardings(bspec, mesh))
+    out_sh = (to_shardings_tree(sspec, mesh), NamedSharding(mesh, P()))
+    return in_sh, out_sh
+
+
+def to_shardings_tree(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ===========================================================================
+# serving steps
+# ===========================================================================
+
+def make_prefill_step(cfg, mesh: Mesh | None):
+    policy = make_activation_policy(mesh, cfg) if mesh is not None else None
+
+    def step_fn(params: Params, batch: dict):
+        with use_policy(policy):
+            return M.prefill(cfg, params, batch)
+
+    return step_fn
+
+
+def make_decode_step(cfg, mesh: Mesh | None):
+    """serve_step for the decode cells: one token against a full cache."""
+    policy = make_activation_policy(mesh, cfg) if mesh is not None else None
+
+    def step_fn(params: Params, cache: Params, token: jax.Array,
+                pos: jax.Array):
+        with use_policy(policy):
+            logits, new_cache = M.decode_step(cfg, params, token, cache, pos)
+            return logits, new_cache
+
+    return step_fn
+
+
+def decode_shardings(cfg, mesh: Mesh, params_shape, cache_shape,
+                     batch: int):
+    pspec = param_pspecs(params_shape, mesh, cfg)
+    cspec = cache_pspecs(cache_shape, mesh, cfg)
+    dp = dp_axes(mesh)
+    from repro.distributed.sharding import _div
+    return (
+        to_shardings_tree(pspec, mesh),
+        to_shardings_tree(cspec, mesh),
+        NamedSharding(mesh, P(_div(mesh, batch, dp), None)),   # token (B, 1)
+        NamedSharding(mesh, P()),                              # pos
+    )

@@ -1,0 +1,84 @@
+"""Hypothesis property tests on the FTL solver's invariants."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import ftl
+from repro.core.ftl.ir import aligned_divisors
+from repro.core.ftl.solver import InfeasibleError
+
+MB = 1 << 20
+
+dim = st.sampled_from([128, 256, 384, 512, 768, 1024, 2048, 4096])
+budget = st.sampled_from([2 * MB, 8 * MB, 32 * MB, 96 * MB])
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dim, k=dim, n=dim, b=budget,
+       gated=st.booleans(), dtype=st.sampled_from(["bfloat16", "float32"]))
+def test_mlp_plan_invariants(m, k, n, b, gated, dtype):
+    g = ftl.fusion.mlp(m=m, d_model=k, d_ff=n, dtype=dtype, gated=gated,
+                       fuse=True)
+    try:
+        plan = ftl.solve(g, vmem_budget=b)
+    except InfeasibleError:
+        return
+    # 1. every tile divides its dim
+    for d, t in plan.tiles.items():
+        assert plan.constraints[d].size % t == 0
+    # 2. VMEM constraint holds
+    assert plan.vmem_bytes <= b
+    # 3. traffic >= one-pass floor
+    sizes = {d: c.size for d, c in plan.constraints.items()}
+    floor = sum(t.bytes_full(sizes) for t in g.hbm_tensors())
+    assert plan.traffic_bytes >= floor
+    # 4. intermediates carry no HBM traffic
+    for t in g.intermediate_tensors():
+        assert t.name not in plan.report.per_tensor_traffic
+    # 5. alignment lattice respected (or whole dim)
+    for d, t in plan.tiles.items():
+        c = plan.constraints[d]
+        assert t % c.alignment == 0 or t == c.size
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=dim, k=dim, n=dim, b=budget)
+def test_fused_beats_or_equals_unfused_when_chosen(m, k, n, b):
+    """The auto planner's decision is consistent with its own cost model."""
+    out = ftl.plan_mlp(m=m, d_model=k, d_ff=n, vmem_budget=b)
+    unfused_traffic = sum(p.traffic_bytes for p in out.unfused)
+    if out.use_fused:
+        assert out.fused.traffic_bytes <= unfused_traffic
+    assert out.chosen_traffic <= unfused_traffic
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 1 << 16), align=st.sampled_from([1, 8, 16, 128]))
+def test_aligned_divisors_props(n, align):
+    cands = aligned_divisors(n, align)
+    assert n in cands                       # whole dim always legal
+    for c in cands:
+        assert n % c == 0
+        assert c % align == 0 or c == n
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dim, dims=st.lists(dim, min_size=2, max_size=4), b=budget)
+def test_gemm_chain_invariants(m, dims, b):
+    g = ftl.fusion.gemm_chain(m=m, dims_kn=dims, fuse=True)
+    try:
+        plan = ftl.solve(g, vmem_budget=b)
+    except InfeasibleError:
+        return
+    assert plan.vmem_bytes <= b
+    for d, t in plan.tiles.items():
+        assert plan.constraints[d].size % t == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(q=st.sampled_from([256, 1024, 4096]),
+       kv=st.sampled_from([256, 1024, 8192]),
+       dh=st.sampled_from([64, 128, 256]))
+def test_attention_plan_invariants(q, kv, dh):
+    plan = ftl.plan_attention(q_len=q, kv_len=kv, head_dim=dh)
+    assert plan.tile("Dh") == dh            # contract_whole kernel policy
+    assert plan.vmem_bytes <= plan.vmem_budget

@@ -1,0 +1,204 @@
+"""Pallas kernel validation: interpret-mode vs the pure-jnp oracles,
+swept over shapes, dtypes and block sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_mlp import fused_mlp
+from repro.kernels.gemm import gemm
+from repro.kernels.gemm_gelu import gemm_act
+from repro.kernels.mlstm import mlstm_scan
+from repro.kernels.rg_lru import rg_lru_scan
+
+
+def rnd(key, shape, dtype, scale=1.0):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return (x * scale).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+# ---------------------------------------------------------------------------
+# GEMM family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (256, 128, 256, 128, 128, 128),
+    (512, 512, 256, 256, 128, 256),
+    (128, 384, 640, 128, 128, 128),
+])
+def test_gemm_matches_ref(m, k, n, bm, bn, bk, dtype):
+    x, w = rnd(0, (m, k), dtype, 0.1), rnd(1, (k, n), dtype, 0.1)
+    out = gemm(x, w, block_m=bm, block_n=bn, block_k=bk, interpret=True)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.gemm(x, w).astype(jnp.float32),
+                               **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("act", ["gelu", "relu", "silu"])
+@pytest.mark.parametrize("bias", [False, True])
+def test_gemm_act_matches_ref(act, bias, dtype):
+    """The paper's exact benchmark op (GEMM + activation fused)."""
+    m, k, n = 256, 384, 512
+    x, w = rnd(0, (m, k), dtype, 0.1), rnd(1, (k, n), dtype, 0.1)
+    b = rnd(2, (n,), dtype) if bias else None
+    out = gemm_act(x, w, b, act=act, block_m=128, block_n=128, block_k=128,
+                   interpret=True)
+    expect = ref.gemm_act(x, w, b, act=act)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               expect.astype(jnp.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("gated", [False, True])
+@pytest.mark.parametrize("m,k,f,n,bm,bf", [
+    (256, 128, 512, 128, 128, 256),
+    (512, 256, 1024, 256, 256, 256),
+])
+def test_fused_mlp_matches_ref(m, k, f, n, bm, bf, gated, dtype):
+    """The FTL flagship: full MLP in one kernel, hidden never leaves VMEM."""
+    x = rnd(0, (m, k), dtype, 0.1)
+    w1 = rnd(1, (k, f), dtype, 0.05)
+    w2 = rnd(2, (f, n), dtype, 0.05)
+    wg = rnd(3, (k, f), dtype, 0.05) if gated else None
+    out = fused_mlp(x, w1, w2, wg, act="gelu", block_m=bm, block_f=bf,
+                    interpret=True)
+    expect = ref.mlp(x, w1, w2, wg, act="gelu")
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               expect.astype(jnp.float32), **tol(dtype))
+
+
+def test_fused_mlp_with_biases():
+    m, k, f, n = 256, 128, 512, 128
+    x = rnd(0, (m, k), jnp.float32, 0.1)
+    w1, w2 = rnd(1, (k, f), jnp.float32, 0.05), rnd(2, (f, n), jnp.float32, 0.05)
+    b1, b2 = rnd(3, (f,), jnp.float32), rnd(4, (n,), jnp.float32)
+    out = fused_mlp(x, w1, w2, None, b1, b2, act="gelu",
+                    block_m=128, block_f=256, interpret=True)
+    expect = ref.mlp(x, w1, w2, None, b1, b2, act="gelu")
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_fused_mlp_rejects_nondividing_blocks():
+    x = rnd(0, (100, 128), jnp.float32)
+    w1, w2 = rnd(1, (128, 512), jnp.float32), rnd(2, (512, 128), jnp.float32)
+    with pytest.raises(ValueError):
+        fused_mlp(x, w1, w2, block_m=64, block_f=256, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("hq,hk", [(4, 4), (8, 2), (4, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_gqa(hq, hk, causal, dtype):
+    b, t, dh = 2, 256, 64
+    q = rnd(0, (b, hq, t, dh), dtype)
+    k = rnd(1, (b, hk, t, dh), dtype)
+    v = rnd(2, (b, hk, t, dh), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                          interpret=True)
+    expect = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               expect.astype(jnp.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 2e-5)
+
+
+def test_flash_attention_local_window():
+    b, h, t, dh = 1, 2, 512, 64
+    q = rnd(0, (b, h, t, dh), jnp.float32)
+    k = rnd(1, (b, h, t, dh), jnp.float32)
+    v = rnd(2, (b, h, t, dh), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=128,
+                          block_q=128, block_k=128, interpret=True)
+    expect = ref.attention(q, k, v, causal=True, window=128)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_cross_q_offset():
+    """decode-style: q block at an offset into the kv sequence."""
+    b, h, dh = 1, 2, 64
+    q = rnd(0, (b, h, 128, dh), jnp.float32)
+    k = rnd(1, (b, h, 512, dh), jnp.float32)
+    v = rnd(2, (b, h, 512, dh), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_offset=384,
+                          block_q=128, block_k=128, interpret=True)
+    expect = ref.attention(q, k, v, causal=True, q_offset=384)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# recurrent kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bt,bd", [(64, 128), (256, 256)])
+def test_rg_lru_matches_ref(bt, bd):
+    b, t, d = 2, 256, 256
+    x = rnd(0, (b, t, d), jnp.float32, 0.5)
+    a = jax.nn.sigmoid(rnd(1, (b, t, d), jnp.float32)) * 0.2 + 0.79
+    h, hT = rg_lru_scan(x, a, block_t=bt, block_d=bd, interpret=True)
+    h_ref, hT_ref = ref.rg_lru_scan(x, a)
+    np.testing.assert_allclose(h, h_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(hT, hT_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_rg_lru_carries_initial_state():
+    b, t, d = 1, 128, 128
+    x = rnd(0, (b, t, d), jnp.float32, 0.5)
+    a = jnp.full((b, t, d), 0.9, jnp.float32)
+    h0 = jnp.ones((b, d), jnp.float32)
+    h, _ = rg_lru_scan(x, a, h0, block_t=64, block_d=128, interpret=True)
+    h_ref, _ = ref.rg_lru_scan(x, a, h0)
+    np.testing.assert_allclose(h, h_ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_t", [64, 128])
+def test_mlstm_matches_ref(block_t):
+    b, h, t, dh = 1, 2, 128, 64
+    q = rnd(0, (b, h, t, dh), jnp.float32, 0.3)
+    k = rnd(1, (b, h, t, dh), jnp.float32, 0.3)
+    v = rnd(2, (b, h, t, dh), jnp.float32, 0.3)
+    i_pre = rnd(3, (b, h, t), jnp.float32)
+    f_pre = rnd(4, (b, h, t), jnp.float32) + 3.0
+    out = mlstm_scan(q, k, v, i_pre, f_pre, block_t=block_t, interpret=True)
+    expect = ref.mlstm_scan(q, k, v, i_pre, f_pre)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_state_continuity_across_chunks():
+    """Chunked kernel must be bit-consistent with the one-chunk kernel."""
+    b, h, t, dh = 1, 1, 256, 64
+    q = rnd(0, (b, h, t, dh), jnp.float32, 0.3)
+    k = rnd(1, (b, h, t, dh), jnp.float32, 0.3)
+    v = rnd(2, (b, h, t, dh), jnp.float32, 0.3)
+    ip = rnd(3, (b, h, t), jnp.float32)
+    fp = rnd(4, (b, h, t), jnp.float32) + 3.0
+    one = mlstm_scan(q, k, v, ip, fp, block_t=256, interpret=True)
+    many = mlstm_scan(q, k, v, ip, fp, block_t=64, interpret=True)
+    np.testing.assert_allclose(one, many, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# FTL-planned dispatch (ops.py)
+# ---------------------------------------------------------------------------
+
+def test_ops_plan_blocks_are_legal():
+    from repro.kernels import ops
+    bm, bf = ops.plan_mlp_blocks(4096, 768, 3072, "bfloat16", False, "gelu")
+    assert 4096 % bm == 0 and 3072 % bf == 0
+    bq, bk = ops.plan_attention_blocks(4096, 4096, 128, "bfloat16")
+    assert 4096 % bq == 0 and 4096 % bk == 0

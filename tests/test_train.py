@@ -1,0 +1,130 @@
+"""Training substrate tests: losses, optimizer, grad accumulation, and the
+end-to-end convergence integration test."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim import OptConfig, adamw_update, init_opt_state, lr_schedule
+from repro.train import steps as S
+from repro.train.losses import cross_entropy
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def test_cross_entropy_matches_manual():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (2, 5, 11))
+    labels = jax.random.randint(key, (2, 5), 0, 11)
+    loss, aux = cross_entropy(logits, labels)
+    p = jax.nn.log_softmax(logits, -1)
+    manual = -jnp.take_along_axis(p, labels[..., None], -1).mean()
+    np.testing.assert_allclose(loss, manual, rtol=1e-5)
+    assert 0.0 <= float(aux["accuracy"]) <= 1.0
+
+
+def test_cross_entropy_mask():
+    logits = jnp.zeros((1, 4, 7))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    mask = jnp.array([[1, 1, 0, 0]], jnp.float32)
+    loss, aux = cross_entropy(logits, labels, mask)
+    np.testing.assert_allclose(loss, np.log(7), rtol=1e-5)
+    assert float(aux["tokens"]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(peak_lr=1e-3, warmup_steps=10, decay_steps=100,
+                    min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(jnp.int32(s), cfg)) for s in range(0, 120, 5)]
+    assert lrs[0] == 0.0
+    assert abs(max(lrs) - 1e-3) < 1e-9
+    assert abs(lrs[-1] - 1e-4) < 1e-6            # floor
+    assert all(a >= b - 1e-12 for a, b in zip(lrs[2:], lrs[3:]))  # decays
+
+
+def test_adamw_decay_mask_spares_norms():
+    params = {"layers": {"ln1": {"scale": jnp.ones(4)},
+                         "mlp": {"w1": {"w": jnp.ones((4, 4))}}}}
+    opt = init_opt_state(params)
+    grads = jax.tree.map(jnp.zeros_like, params)
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=0, decay_steps=1,
+                    weight_decay=0.5)
+    new_params, _, _ = adamw_update(grads, opt, params, jnp.int32(5), cfg)
+    # zero grad + decay: weights shrink, norm scales don't
+    assert float(new_params["layers"]["ln1"]["scale"][0]) == 1.0
+    assert float(new_params["layers"]["mlp"]["w1"]["w"][0, 0]) < 1.0
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    opt = init_opt_state(params)
+    grads = {"w": jnp.full((4,), 1e6)}
+    cfg = OptConfig(peak_lr=1e-3, warmup_steps=0, decay_steps=1,
+                    grad_clip=1.0, weight_decay=0.0)
+    _, _, metrics = adamw_update(grads, opt, params, jnp.int32(5), cfg)
+    assert float(metrics["grad_norm"]) > 1e5   # reported pre-clip
+
+
+# ---------------------------------------------------------------------------
+# grad accumulation
+# ---------------------------------------------------------------------------
+
+def test_accum_equivalent_to_full_batch():
+    cfg = configs.get_config("llama3.2-3b").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, remat=False)
+    opt = OptConfig(peak_lr=1e-3, warmup_steps=0, decay_steps=10)
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(0), (8, 32), 0, cfg.vocab_size)}
+    s0 = S.init_train_state(cfg, jax.random.PRNGKey(1))
+    s1 = S.init_train_state(cfg, jax.random.PRNGKey(1))
+    st_a, m_a = jax.jit(S.make_train_step(cfg, None, opt, accum=1))(s0, batch)
+    st_b, m_b = jax.jit(S.make_train_step(cfg, None, opt, accum=4))(s1, batch)
+    np.testing.assert_allclose(float(m_a["loss"]), float(m_b["loss"]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(st_a.params),
+                    jax.tree.leaves(st_b.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end convergence (integration)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_bigram_convergence_toward_floor():
+    cfg = configs.get_config("yi-6b").reduced()
+    dc = DataConfig(vocab_size=cfg.vocab_size, global_batch=8, seq_len=64,
+                    kind="bigram", noise=4)
+    ds = SyntheticLM(dc, process_index=0, process_count=1)
+    st = S.init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(S.make_train_step(
+        cfg, None, OptConfig(peak_lr=1e-2, warmup_steps=5, decay_steps=60)))
+    losses = []
+    for i in range(60):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        st, m = step(st, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 2.0, (losses[0], losses[-1])
+    assert losses[-1] < 4.0             # approaching log(noise)=1.386
+
+
+def test_moe_aux_loss_reported():
+    cfg = configs.get_config("moonshot-v1-16b-a3b").reduced()
+    st = S.init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(S.make_train_step(cfg, None, OptConfig()))
+    batch = {"tokens": jnp.ones((2, 32), jnp.int32)}
+    _, metrics = step(st, batch)
+    assert "moe_aux" in metrics
+    # balanced-ish routing at init: aux ~ 1 for E·Σ me·ce with uniform
+    assert 0.1 < float(metrics["moe_aux"]) < 10.0

@@ -1,0 +1,26 @@
+"""Test helpers: run a python snippet in a subprocess with N host devices
+(multi-device tests must not pollute the main test process's jax)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560
+                     ) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-c", code], env=env, timeout=timeout,
+        capture_output=True, text=True)
+
+
+def check(proc: subprocess.CompletedProcess) -> None:
+    assert proc.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{proc.stdout[-3000:]}\n"
+        f"STDERR:\n{proc.stderr[-3000:]}")
