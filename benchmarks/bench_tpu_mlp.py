@@ -1,17 +1,17 @@
-"""FTL at production scale on the TPU target: fused vs layer-per-layer
-MLP traffic for every assigned architecture's MLP dims (the paper's
-technique as deployed by this framework).
+"""FTL at production scale on the TPU target: the graph partitioner's
+fusion-partition choice vs the layer-per-layer baseline for every assigned
+architecture's MLP dims (the paper's technique as deployed).
 
-Reports the auto-fusion decision, HBM traffic both ways, the modeled
-speedup at v5e bandwidth, and the VMEM footprint the plan claims — per
-arch, at the per-shard sizes the 16×16 mesh actually sees (the FTL
-*sharding constraint* family, DESIGN.md §2)."""
+Each arch's MLP chain goes through ``partition.plan_chain`` (the DP over
+contiguous cuts) at the per-shard sizes the 16×16 mesh actually sees (the
+FTL *sharding constraint* family, DESIGN.md §2); the canonical fused /
+partial / unfused schedules are priced alongside via ``plan_fixed``.  The
+whole-block plan (projections + attention core + MLP through one
+partitioner, executors bound by the registry) is reported per arch too."""
 from __future__ import annotations
 
 from repro import configs
-from repro.core import ftl
-
-from .hw_profiles import TPU_V5E
+from repro.core.ftl import InfeasibleError, graph, partition, registry
 
 MB = 1 << 20
 TOKENS = 8192                  # per-device microbatch tokens (train_4k-ish)
@@ -37,36 +37,53 @@ def run() -> list[dict]:
             continue
         d, f, gated = dims
         f_shard = f // TP if f % TP == 0 else f
-        out = ftl.plan_mlp(m=TOKENS, d_model=d, d_ff=f_shard,
-                           gated=gated, act=cfg.mlp_act,
-                           vmem_budget=96 * MB)
-        fused_t = out.fused.traffic_bytes if out.fused else None
-        part_t = (sum(p.traffic_bytes for p in out.partial)
-                  if out.partial else None)
-        unf_t = sum(p.traffic_bytes for p in out.unfused)
-        chosen = out.chosen_traffic
+        g = graph.mlp_graph(m=TOKENS, d_model=d, d_ff=f_shard, gated=gated,
+                            act=cfg.mlp_act)
+        chosen = partition.plan_chain(g, vmem_budget=96 * MB)
+        unfused = partition.plan_fixed(g, partition.all_cuts(g),
+                                       vmem_budget=96 * MB)
+        try:
+            fused = partition.plan_fixed(g, (), vmem_budget=96 * MB)
+        except InfeasibleError:
+            fused = None
+        try:
+            partial = partition.plan_fixed(g, (g.n_ops - 1,),
+                                           vmem_budget=96 * MB)
+        except InfeasibleError:
+            partial = None
+        try:
+            block = registry.plan_block(cfg, m=TOKENS, vmem_budget=96 * MB)
+            block_sched = block.schedule
+        except (ValueError, InfeasibleError):
+            block_sched = "-"
+        unf_t = unfused.traffic_bytes
+        fused_seg = fused.segments[0].plan if fused else None
         rows.append({
             "arch": arch,
             "mlp": f"{d}x{f_shard}" + ("(g)" if gated else ""),
-            "schedule": out.schedule,
+            "schedule": chosen.schedule,
+            "block_schedule": block_sched,
             "unfused_MiB": round(unf_t / MB, 1),
-            "partial_MiB": round(part_t / MB, 1) if part_t else "-",
-            "fused_MiB": round(fused_t / MB, 1) if fused_t else "-",
-            "traffic_red_%": round(100 * (1 - chosen / unf_t), 1),
-            "hbm_bound_speedup": round(unf_t / chosen, 2),
-            "vmem_MiB": round(out.fused.vmem_bytes / MB, 1)
-            if out.fused else "-",
-            "tile_m": out.fused.tile("M") if out.fused else "-",
-            "tile_f": out.fused.tile("F") if out.fused else "-",
+            "partial_MiB": round(partial.traffic_bytes / MB, 1)
+            if partial else "-",
+            "fused_MiB": round(fused.traffic_bytes / MB, 1)
+            if fused else "-",
+            "traffic_red_%": round(
+                100 * (1 - chosen.traffic_bytes / unf_t), 1),
+            "hbm_bound_speedup": round(unf_t / chosen.traffic_bytes, 2),
+            "vmem_MiB": round(fused_seg.vmem_bytes / MB, 1)
+            if fused_seg else "-",
+            "tile_m": fused_seg.tile("M") if fused_seg else "-",
+            "tile_f": fused_seg.tile("F") if fused_seg else "-",
         })
     return rows
 
 
 def main() -> None:
     rows = run()
-    keys = ["arch", "mlp", "schedule", "unfused_MiB", "partial_MiB",
-            "fused_MiB", "traffic_red_%", "hbm_bound_speedup", "vmem_MiB",
-            "tile_m", "tile_f"]
+    keys = ["arch", "mlp", "schedule", "block_schedule", "unfused_MiB",
+            "partial_MiB", "fused_MiB", "traffic_red_%",
+            "hbm_bound_speedup", "vmem_MiB", "tile_m", "tile_f"]
     print(",".join(keys))
     for r in rows:
         print(",".join(str(r.get(k, r.get("note", ""))) for k in keys))

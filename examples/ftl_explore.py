@@ -11,6 +11,7 @@ Run:  PYTHONPATH=src python examples/ftl_explore.py [--m 8192] [--d 4096]
 import argparse
 
 from repro.core import ftl
+from repro.core.ftl import graph, partition, registry
 
 KB, MB = 1 << 10, 1 << 20
 
@@ -21,6 +22,8 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=4096)
     ap.add_argument("--f", type=int, default=11008)
     ap.add_argument("--gated", action="store_true")
+    ap.add_argument("--arch", default=None,
+                    help="also show the whole-block graph plan for an arch")
     args = ap.parse_args()
 
     print(f"MLP m={args.m} d_model={args.d} d_ff={args.f} "
@@ -52,6 +55,20 @@ def main() -> None:
               f"{out.comparison.summary() if out.comparison else ''}")
     else:
         print("  d_ff not divisible by 16 — planner keeps it whole")
+
+    # the graph partitioner's own view of the same chain (DP over cuts)
+    g = graph.mlp_graph(m=args.m, d_model=args.d, d_ff=args.f,
+                        gated=args.gated)
+    chain = partition.plan_chain(g, vmem_budget=96 * MB)
+    print("\ngraph partitioner (96 MiB):")
+    print(chain.summary())
+
+    if args.arch:
+        from repro import configs
+        cfg = configs.get_config(args.arch)
+        bp = registry.plan_block(cfg, m=args.m)
+        print(f"\nwhole-block plan for {args.arch}:")
+        print(bp.summary())
 
 
 if __name__ == "__main__":

@@ -1,31 +1,52 @@
 """Fused-Tiled Layers (FTL) — the paper's contribution as a JAX library.
 
-Pipeline (paper Fig. 1):
+Pipeline (paper Fig. 1, extended to whole-model planning):
   step 1  ir.py          dim variables per tensor dimension
   step 2  constraints.py geometric / kernel-policy / performance constraints
-  step 3  fusion.py      select consecutive layers, bind shared dims
-  step 4  solver.py      solve the joint constraint-optimization problem
+  step 3  graph.py       capture a whole block (or any layer chain) as an
+                         op chain — fusion.py keeps the hand-built chains
+  step 4  partition.py   fusion-partition optimizer: enumerate contiguous
+                         cuts, price each segment with the solver, DP over
+                         cut points for the traffic-minimal schedule
+  step 5  solver.py      branch-and-bound tile solver per fusion group
+  step 6  registry.py    executor registry: planned groups → Pallas
+                         kernels when shapes qualify, XLA scan fallback
 
-Artifacts: plan.TilePlan (tiles + grid + cost report) consumed by
+Artifacts: plan.TilePlan (tiles + grid + cost report) per fusion group and
+partition.ChainPlan / registry.BlockPlan per chain, consumed by
   * src/repro/kernels/*  — Pallas TPU kernels (BlockSpecs from the plan)
-  * executor_xla.py      — portable lax.scan tiling executor
+  * executor_xla.py      — portable lax.scan tiling executors
+  * registry.plan_block  — the one entry point models/launch/benchmarks use
+
+auto.plan_mlp / auto.plan_attention remain as thin cached wrappers over
+the graph → partition path.
 """
-from . import auto, constraints, cost, executor_xla, fusion, ir, plan, solver
+from . import (auto, constraints, cost, executor_xla, fusion, graph, ir,
+               partition, plan, registry, solver)
 from .auto import MLPPlanOutcome, plan_attention, plan_mlp
 from .constraints import build_dim_constraints
 from .cost import CostReport, evaluate
 from .fusion import attention, gemm_act, gemm_chain, mlp
+from .graph import OpGraph, attention_graph, block_graph, gemm_act_graph, \
+    gemm_chain_graph, mlp_graph
 from .ir import Dim, FusionGroup, KernelPolicy, OpNode, Role, TensorSpec
+from .partition import ChainPlan, Segment, all_cuts, plan_chain, plan_fixed
 from .plan import FusionComparison, TilePlan, compare
+from .registry import BlockPlan, ExecContext, Executor, mlp_executor, \
+    plan_block
 from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError, solve
 
 __all__ = [
     "Dim", "FusionGroup", "KernelPolicy", "OpNode", "Role", "TensorSpec",
     "CostReport", "TilePlan", "FusionComparison",
     "attention", "gemm_act", "gemm_chain", "mlp",
+    "OpGraph", "attention_graph", "block_graph", "gemm_act_graph",
+    "gemm_chain_graph", "mlp_graph",
+    "ChainPlan", "Segment", "all_cuts", "plan_chain", "plan_fixed",
+    "BlockPlan", "ExecContext", "Executor", "mlp_executor", "plan_block",
     "build_dim_constraints", "evaluate", "solve", "compare",
     "DEFAULT_VMEM_BUDGET", "InfeasibleError",
     "MLPPlanOutcome", "plan_attention", "plan_mlp",
-    "auto", "constraints", "cost", "executor_xla", "fusion", "ir", "plan",
-    "solver",
+    "auto", "constraints", "cost", "executor_xla", "fusion", "graph", "ir",
+    "partition", "plan", "registry", "solver",
 ]

@@ -1,11 +1,13 @@
-"""Automatic fusion selection — beyond-paper extension.
+"""Automatic fusion selection — thin wrappers over the graph partitioner.
 
-The paper fuses a manually chosen chain.  At framework level we plan BOTH
-schedules (fused, layer-per-layer) with the same solver and pick the one
-with lower modeled HBM traffic.  This matters because fusion is *not*
-always a win: when weights dominate and VMEM is scarce, the joint tiling
-constraints can force weight revisits that exceed the intermediate savings
-(see tests/test_ftl_solver.py::test_fusion_not_always_wins).
+Historically this module hard-coded a three-way MLP choice (fused /
+partial / unfused).  The general mechanism now lives in ``graph.py`` +
+``partition.py``: any op chain gets a globally traffic-minimal fusion
+partition from a dynamic program over cut points.  ``plan_mlp`` and
+``plan_attention`` remain the stable cached entry points; the three
+canonical MLP schedules are still priced explicitly (via
+``partition.plan_fixed``) because the benchmarks and the fused-vs-unfused
+comparison report all of them, but the *decision* is the partitioner's.
 
 Plans are cached per (shape, dtype, budget, sharding) — they are static
 compile-time artifacts, exactly like Deeploy's generated schedules.
@@ -16,9 +18,10 @@ import dataclasses
 import functools
 from typing import Mapping
 
-from . import fusion
+from . import graph, partition
+from .partition import ChainPlan
 from .plan import FusionComparison, TilePlan, compare
-from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError, solve
+from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,9 +32,12 @@ class MLPPlanOutcome:
     use_fused: bool
     partial: tuple[TilePlan, ...] = ()
     schedule: str = ""               # 'fused' | 'partial' | 'unfused'
+    chain: ChainPlan | None = None   # the partitioner's chosen schedule
 
     @property
     def chosen_traffic(self) -> int:
+        if self.chain is not None:
+            return self.chain.traffic_bytes
         if self.schedule == "fused" or (not self.schedule and self.use_fused):
             return self.fused.traffic_bytes
         if self.schedule == "partial":
@@ -55,38 +61,32 @@ def _plan_mlp_cached(
     sharded: tuple | None,
 ) -> MLPPlanOutcome:
     sharded_sizes = dict(sharded) if sharded else None
-    kw = dict(m=m, d_model=d_model, d_ff=d_ff, dtype=dtype, gated=gated, act=act)
+    g = graph.mlp_graph(m=m, d_model=d_model, d_ff=d_ff, dtype=dtype,
+                        gated=gated, act=act)
+    kw = dict(vmem_budget=vmem_budget, sharded_sizes=sharded_sizes)
+    # the partitioner's decision over every contiguous cut of the chain
+    chain = partition.plan_chain(g, **kw)
+    # canonical three schedules, still priced for comparison/reporting
     unfused = tuple(
-        solve(g, vmem_budget=vmem_budget, sharded_sizes=sharded_sizes)
-        for g in fusion.mlp(fuse=False, **kw)
+        s.plan for s in partition.plan_fixed(g, partition.all_cuts(g),
+                                             **kw).segments
     )
-    # partial schedule: GEMM+act fused (the paper's op), GEMM2 separate
     try:
         partial = tuple(
-            solve(g, vmem_budget=vmem_budget, sharded_sizes=sharded_sizes)
-            for g in fusion.mlp_partial(**kw)
+            s.plan
+            for s in partition.plan_fixed(g, (g.n_ops - 1,), **kw).segments
         )
     except InfeasibleError:
         partial = ()
     try:
-        fused = solve(
-            fusion.mlp(fuse=True, **kw),
-            vmem_budget=vmem_budget,
-            sharded_sizes=sharded_sizes,
-        )
+        fused = partition.plan_fixed(g, (), **kw).segments[0].plan
     except InfeasibleError:
         fused = None
-    cands: dict[str, int] = {
-        "unfused": sum(p.traffic_bytes for p in unfused)}
-    if partial:
-        cands["partial"] = sum(p.traffic_bytes for p in partial)
-    if fused is not None:
-        cands["fused"] = fused.traffic_bytes
-    schedule = min(cands, key=cands.get)
     cmp = compare(fused, unfused) if fused is not None else None
     return MLPPlanOutcome(fused, unfused, cmp,
-                          use_fused=schedule == "fused",
-                          partial=partial, schedule=schedule)
+                          use_fused=chain.schedule == "fused",
+                          partial=partial, schedule=chain.schedule,
+                          chain=chain)
 
 
 def plan_mlp(
@@ -115,8 +115,6 @@ def plan_attention(
     dtype: str = "bfloat16",
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
 ) -> TilePlan:
-    return solve(
-        fusion.attention(q_len=q_len, kv_len=kv_len, head_dim=head_dim,
-                         dtype=dtype),
-        vmem_budget=vmem_budget,
-    )
+    g = graph.attention_graph(q_len=q_len, kv_len=kv_len, head_dim=head_dim,
+                              dtype=dtype)
+    return partition.plan_fixed(g, (), vmem_budget=vmem_budget).segments[0].plan

@@ -85,14 +85,59 @@ def mlp_scan(
     return yt.reshape(*lead, m, w2.shape[-1])
 
 
+def mlp_partial_scan(
+    x: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    wg: jax.Array | None = None,
+    b1: jax.Array | None = None,
+    b2: jax.Array | None = None,
+    *,
+    act: str = "gelu",
+    tile_m: int,
+    precision=jax.lax.Precision.DEFAULT,
+) -> jax.Array:
+    """Partial-schedule MLP: up-projection (+gate+act) scanned over token
+    tiles, hidden tensor materialized once, down GEMM un-tiled.
+
+    The portable analogue of the planner's 'partial' schedule: GEMM2's
+    tiling is unconstrained by GEMM1's, at the cost of one full (M, F)
+    round trip."""
+    *lead, m, k = x.shape
+    if m % tile_m != 0:
+        raise ValueError(f"tile_m={tile_m} does not divide M={m}")
+    n_tiles = m // tile_m
+    act_fn = activation(act)
+
+    xt = jnp.moveaxis(x.reshape(*lead, n_tiles, tile_m, k), -3, 0)
+
+    def up(_, xm):
+        h = jnp.matmul(xm, w1, precision=precision)
+        if b1 is not None:
+            h = h + b1
+        h = act_fn(h)
+        if wg is not None:
+            h = h * jnp.matmul(xm, wg, precision=precision)
+        return None, h.astype(x.dtype)
+
+    _, ht = jax.lax.scan(up, None, xt)
+    h = jnp.moveaxis(ht, 0, -3).reshape(*lead, m, w1.shape[-1])
+    y = jnp.matmul(h, w2, precision=precision)
+    if b2 is not None:
+        y = y + b2
+    return y.astype(x.dtype)
+
+
 def mlp_from_plan(
     plan: TilePlan,
     x: jax.Array,
     w1: jax.Array,
     w2: jax.Array,
     wg: jax.Array | None = None,
+    b1: jax.Array | None = None,
+    b2: jax.Array | None = None,
     *,
     act: str = "gelu",
 ) -> jax.Array:
     """Execute an ``fusion.mlp`` plan with the scan executor (M tiling)."""
-    return mlp_scan(x, w1, w2, wg, act=act, tile_m=plan.tile("M"))
+    return mlp_scan(x, w1, w2, wg, b1, b2, act=act, tile_m=plan.tile("M"))

@@ -81,6 +81,22 @@ def _collect(
 # builders
 # ---------------------------------------------------------------------------
 
+def gemm_act_ops(
+    *, m: int, k: int, n: int, dtype: str = "bfloat16", act: str = "gelu",
+) -> tuple[list[OpNode], list[Dim]]:
+    """Raw op chain of the paper's ViT-MLP benchmark (see :func:`gemm_act`)."""
+    dims = [Dim("M", m), Dim("K", k), Dim("F", n)]
+    x = TensorSpec("x", ("M", "K"), dtype, Role.INPUT)
+    w1 = TensorSpec("w1", ("K", "F"), dtype, Role.WEIGHT)
+    h_raw = TensorSpec("h_raw", ("M", "F"), dtype, Role.OUTPUT)
+    h = TensorSpec("h", ("M", "F"), dtype, Role.OUTPUT)
+    ops = [
+        gemm("gemm1", x, w1, h_raw, contract="K", policy=GEMM_POLICY),
+        elementwise(act, [h_raw], h),
+    ]
+    return ops, dims
+
+
 def gemm_act(
     *,
     m: int,
@@ -92,16 +108,37 @@ def gemm_act(
     name: str = "gemm_act",
 ):
     """The paper's ViT-MLP benchmark: ``H = act(X @ W1)``."""
-    dims = [Dim("M", m), Dim("K", k), Dim("F", n)]
+    ops, dims = gemm_act_ops(m=m, k=k, n=n, dtype=dtype, act=act)
+    return _collect(name, ops, dims, fuse)
+
+
+def mlp_ops(
+    *,
+    m: int,
+    d_model: int,
+    d_ff: int,
+    dtype: str = "bfloat16",
+    gated: bool = False,
+    act: str = "gelu",
+) -> tuple[list[OpNode], list[Dim]]:
+    """Raw op chain of the full transformer MLP (see :func:`mlp`)."""
+    dims = [Dim("M", m), Dim("K", d_model), Dim("F", d_ff), Dim("N", d_model)]
     x = TensorSpec("x", ("M", "K"), dtype, Role.INPUT)
     w1 = TensorSpec("w1", ("K", "F"), dtype, Role.WEIGHT)
-    h_raw = TensorSpec("h_raw", ("M", "F"), dtype, Role.OUTPUT)
+    w2 = TensorSpec("w2", ("F", "N"), dtype, Role.WEIGHT)
+    h1 = TensorSpec("h1", ("M", "F"), dtype, Role.OUTPUT)
     h = TensorSpec("h", ("M", "F"), dtype, Role.OUTPUT)
-    ops = [
-        gemm("gemm1", x, w1, h_raw, contract="K", policy=GEMM_POLICY),
-        elementwise(act, [h_raw], h),
-    ]
-    return _collect(name, ops, dims, fuse)
+    y = TensorSpec("y", ("M", "N"), dtype, Role.OUTPUT)
+    ops = [gemm("gemm1", x, w1, h1, contract="K", policy=GEMM_POLICY)]
+    if gated:
+        wg = TensorSpec("wg", ("K", "F"), dtype, Role.WEIGHT)
+        hg = TensorSpec("hg", ("M", "F"), dtype, Role.OUTPUT)
+        ops.append(gemm("gemm_gate", x, wg, hg, contract="K", policy=GEMM_POLICY))
+        ops.append(elementwise(f"{act}_mul", [h1, hg], h))
+    else:
+        ops.append(elementwise(act, [h1], h))
+    ops.append(gemm("gemm2", h, w2, y, contract="F", policy=GEMM_POLICY))
+    return ops, dims
 
 
 def mlp(
@@ -121,22 +158,8 @@ def mlp(
     failure mode the paper showcases (intermediate exceeding L2 → L3 spill;
     here: huge HBM round-trips at long sequence length).
     """
-    dims = [Dim("M", m), Dim("K", d_model), Dim("F", d_ff), Dim("N", d_model)]
-    x = TensorSpec("x", ("M", "K"), dtype, Role.INPUT)
-    w1 = TensorSpec("w1", ("K", "F"), dtype, Role.WEIGHT)
-    w2 = TensorSpec("w2", ("F", "N"), dtype, Role.WEIGHT)
-    h1 = TensorSpec("h1", ("M", "F"), dtype, Role.OUTPUT)
-    h = TensorSpec("h", ("M", "F"), dtype, Role.OUTPUT)
-    y = TensorSpec("y", ("M", "N"), dtype, Role.OUTPUT)
-    ops = [gemm("gemm1", x, w1, h1, contract="K", policy=GEMM_POLICY)]
-    if gated:
-        wg = TensorSpec("wg", ("K", "F"), dtype, Role.WEIGHT)
-        hg = TensorSpec("hg", ("M", "F"), dtype, Role.OUTPUT)
-        ops.append(gemm("gemm_gate", x, wg, hg, contract="K", policy=GEMM_POLICY))
-        ops.append(elementwise(f"{act}_mul", [h1, hg], h))
-    else:
-        ops.append(elementwise(act, [h1], h))
-    ops.append(gemm("gemm2", h, w2, y, contract="F", policy=GEMM_POLICY))
+    ops, dims = mlp_ops(m=m, d_model=d_model, d_ff=d_ff, dtype=dtype,
+                        gated=gated, act=act)
     return _collect(name, ops, dims, fuse)
 
 
@@ -184,20 +207,10 @@ def mlp_partial(
     return [g1, g2]
 
 
-def attention(
-    *,
-    q_len: int,
-    kv_len: int,
-    head_dim: int,
-    dtype: str = "bfloat16",
-    fuse: bool = True,
-    name: str = "attention",
-):
-    """Fused-tiled attention for ONE head: S = Q@Kᵀ; P = softmax(S); O = P@V.
-
-    The (q_len, kv_len) score matrix is the intermediate being fused away —
-    flash attention is exactly an FTL instance (DESIGN.md §5).
-    """
+def attention_ops(
+    *, q_len: int, kv_len: int, head_dim: int, dtype: str = "bfloat16",
+) -> tuple[list[OpNode], list[Dim]]:
+    """Raw op chain of one attention head (see :func:`attention`)."""
     dims = [Dim("Tq", q_len), Dim("Tk", kv_len), Dim("Dh", head_dim)]
     q = TensorSpec("q", ("Tq", "Dh"), dtype, Role.INPUT)
     k = TensorSpec("k", ("Tk", "Dh"), dtype, Role.INPUT)
@@ -214,18 +227,32 @@ def attention(
         # softmax rescale trick (kernel-policy: accumulate allowed).
         gemm("pv", p, v, o, contract="Tk", policy=GEMM_POLICY),
     ]
+    return ops, dims
+
+
+def attention(
+    *,
+    q_len: int,
+    kv_len: int,
+    head_dim: int,
+    dtype: str = "bfloat16",
+    fuse: bool = True,
+    name: str = "attention",
+):
+    """Fused-tiled attention for ONE head: S = Q@Kᵀ; P = softmax(S); O = P@V.
+
+    The (q_len, kv_len) score matrix is the intermediate being fused away —
+    flash attention is exactly an FTL instance (DESIGN.md §5).
+    """
+    ops, dims = attention_ops(q_len=q_len, kv_len=kv_len, head_dim=head_dim,
+                              dtype=dtype)
     return _collect(name, ops, dims, fuse)
 
 
-def gemm_chain(
-    *,
-    m: int,
-    dims_kn: Sequence[int],
-    dtype: str = "bfloat16",
-    fuse: bool = True,
-    name: str = "gemm_chain",
-):
-    """X(M,K0) @ W1(K0,K1) @ W2(K1,K2) @ ... — generic FTL chain."""
+def gemm_chain_ops(
+    *, m: int, dims_kn: Sequence[int], dtype: str = "bfloat16",
+) -> tuple[list[OpNode], list[Dim]]:
+    """Raw op chain of back-to-back GEMMs (see :func:`gemm_chain`)."""
     dim_objs = [Dim("M", m)] + [Dim(f"K{i}", s) for i, s in enumerate(dims_kn)]
     tensors = [TensorSpec("x", ("M", "K0"), dtype, Role.INPUT)]
     ops = []
@@ -237,4 +264,17 @@ def gemm_chain(
                  policy=GEMM_POLICY)
         )
         tensors.append(out)
+    return ops, dim_objs
+
+
+def gemm_chain(
+    *,
+    m: int,
+    dims_kn: Sequence[int],
+    dtype: str = "bfloat16",
+    fuse: bool = True,
+    name: str = "gemm_chain",
+):
+    """X(M,K0) @ W1(K0,K1) @ W2(K1,K2) @ ... — generic FTL chain."""
+    ops, dim_objs = gemm_chain_ops(m=m, dims_kn=dims_kn, dtype=dtype)
     return _collect(name, ops, dim_objs, fuse)

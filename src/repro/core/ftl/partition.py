@@ -1,0 +1,221 @@
+"""Fusion-partition optimization over an op chain (beyond-paper step 3½).
+
+The paper fuses one manually chosen pair of layers; the seed generalized
+that to a three-way MLP choice (fused / partial / unfused).  This module
+subsumes both: given an :class:`~repro.core.ftl.graph.OpGraph`, it
+enumerates every *contiguous partition* of the chain (LoopTree-style), has
+the branch-and-bound tile solver price each candidate segment, and runs a
+dynamic program over cut points to pick the globally traffic-minimal
+schedule.
+
+For an ``n``-op chain there are ``2^(n-1)`` partitions but only
+``n·(n+1)/2`` distinct segments, so the DP solves each segment once and
+composes:
+
+    best[i] = min over j < i of  best[j] + cost(segment ops[j:i])
+
+Segments that violate a barrier (head-split reshape, repeat change) or
+whose tiling problem is infeasible at the VMEM budget are skipped.  The
+cost of a segment is its solved HBM traffic times its multiplicity
+(per-head segments run once per head).
+
+``plan_fixed`` prices one specific partition — the hook the benchmarks
+use to reproduce the paper's fused-vs-unfused table regardless of which
+schedule the DP prefers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable, Mapping, Sequence
+
+from .graph import OpGraph
+from .plan import TilePlan
+from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError, solve
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One planned contiguous piece of the chain."""
+
+    lo: int
+    hi: int
+    repeat: int
+    plan: TilePlan
+
+    @property
+    def traffic_bytes(self) -> int:
+        return self.plan.traffic_bytes * self.repeat
+
+    @property
+    def dma_transfers(self) -> int:
+        return self.plan.dma_transfers * self.repeat
+
+    @property
+    def vmem_bytes(self) -> int:
+        return self.plan.vmem_bytes
+
+    def op_names(self) -> tuple[str, ...]:
+        return tuple(op.name for op in self.plan.group.ops)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """A fully planned partition of an op chain."""
+
+    graph: OpGraph
+    segments: tuple[Segment, ...]
+    vmem_budget: int
+
+    @property
+    def traffic_bytes(self) -> int:
+        return sum(s.traffic_bytes for s in self.segments)
+
+    @property
+    def dma_transfers(self) -> int:
+        return sum(s.dma_transfers for s in self.segments)
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Peak VMEM: segments execute sequentially."""
+        return max(s.vmem_bytes for s in self.segments)
+
+    def cuts(self) -> tuple[int, ...]:
+        return tuple(s.lo for s in self.segments[1:])
+
+    @property
+    def schedule(self) -> str:
+        """Three-way label compatible with the seed's MLP auto-planner."""
+        if len(self.segments) == 1:
+            return "fused"
+        if len(self.segments) == self.graph.n_ops:
+            return "unfused"
+        return "partial"
+
+    def segment_of(self, op_name: str) -> Segment:
+        for s in self.segments:
+            if op_name in s.op_names():
+                return s
+        raise KeyError(op_name)
+
+    def summary(self) -> str:
+        MB = 1 << 20
+        lines = [
+            f"FTL chain plan '{self.graph.name}': {self.schedule} "
+            f"({len(self.segments)} segment(s), cuts at {self.cuts()})",
+            f"  traffic : {self.traffic_bytes / MB:.2f} MiB over "
+            f"{self.dma_transfers} DMA transfers",
+            f"  VMEM    : {self.vmem_bytes / MB:.2f} MiB peak / "
+            f"{self.vmem_budget / MB:.0f} MiB budget",
+        ]
+        for s in self.segments:
+            rep = f" x{s.repeat}" if s.repeat > 1 else ""
+            lines.append(
+                f"  [{s.lo}:{s.hi}]{rep} {'+'.join(s.op_names())}: "
+                f"{s.traffic_bytes / MB:.2f} MiB"
+            )
+        return "\n".join(lines)
+
+
+def _freeze(d: Mapping[str, int] | None) -> tuple | None:
+    return tuple(sorted(d.items())) if d else None
+
+
+def _solve_segment(
+    graph: OpGraph,
+    lo: int,
+    hi: int,
+    vmem_budget: int,
+    sharded: tuple | None,
+) -> Segment | None:
+    """Price one segment; None when infeasible at the budget."""
+    try:
+        plan = solve(
+            graph.group(lo, hi),
+            vmem_budget=vmem_budget,
+            sharded_sizes=dict(sharded) if sharded else None,
+        )
+    except InfeasibleError:
+        return None
+    return Segment(lo=lo, hi=hi, repeat=graph.repeat(lo, hi), plan=plan)
+
+
+@functools.lru_cache(maxsize=256)
+def _plan_chain_cached(
+    graph: OpGraph, vmem_budget: int, sharded: tuple | None
+) -> ChainPlan:
+    n = graph.n_ops
+    seg: dict[tuple[int, int], Segment | None] = {}
+    for lo in range(n):
+        for hi in range(lo + 1, n + 1):
+            if graph.crosses_barrier(lo, hi):
+                continue
+            seg[(lo, hi)] = _solve_segment(graph, lo, hi, vmem_budget,
+                                           sharded)
+
+    # DP over cut points; key = (traffic, dma, n_segments) for determinism.
+    best: list[tuple[tuple[int, int, int], tuple[Segment, ...]] | None]
+    best = [None] * (n + 1)
+    best[0] = ((0, 0, 0), ())
+    for hi in range(1, n + 1):
+        for lo in range(hi):
+            prev = best[lo]
+            s = seg.get((lo, hi))
+            if prev is None or s is None:
+                continue
+            (pt, pd, pn), psegs = prev
+            key = (pt + s.traffic_bytes, pd + s.dma_transfers, pn + 1)
+            if best[hi] is None or key < best[hi][0]:
+                best[hi] = (key, psegs + (s,))
+    if best[n] is None:
+        raise InfeasibleError(
+            f"graph {graph.name}: no partition fits {vmem_budget} B VMEM"
+        )
+    return ChainPlan(graph=graph, segments=best[n][1],
+                     vmem_budget=vmem_budget)
+
+
+def plan_chain(
+    graph: OpGraph,
+    *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    sharded_sizes: Mapping[str, int] | None = None,
+) -> ChainPlan:
+    """Globally traffic-minimal fusion partition of ``graph``."""
+    return _plan_chain_cached(graph, vmem_budget, _freeze(sharded_sizes))
+
+
+def plan_fixed(
+    graph: OpGraph,
+    cuts: Iterable[int],
+    *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    sharded_sizes: Mapping[str, int] | None = None,
+) -> ChainPlan:
+    """Price one specific partition given by ``cuts`` (positions 1..n-1).
+
+    Mandatory barriers are added automatically.  Raises
+    :class:`InfeasibleError` if any segment has no feasible tiling.
+    """
+    n = graph.n_ops
+    cut_set = set(cuts) | set(graph.barriers)
+    if any(c < 1 or c >= n for c in cut_set):
+        raise ValueError(f"cuts {sorted(cut_set)} out of range for {n} ops")
+    bounds = [0] + sorted(cut_set) + [n]
+    sharded = _freeze(sharded_sizes)
+    segments = []
+    for lo, hi in zip(bounds, bounds[1:]):
+        s = _solve_segment(graph, lo, hi, vmem_budget, sharded)
+        if s is None:
+            raise InfeasibleError(
+                f"graph {graph.name}: segment [{lo}, {hi}) does not fit "
+                f"{vmem_budget} B VMEM"
+            )
+        segments.append(s)
+    return ChainPlan(graph=graph, segments=tuple(segments),
+                     vmem_budget=vmem_budget)
+
+
+def all_cuts(graph: OpGraph) -> tuple[int, ...]:
+    """The layer-per-layer partition of ``graph``."""
+    return tuple(range(1, graph.n_ops))

@@ -1,0 +1,411 @@
+"""Executor registry: planned fusion groups → concrete implementations.
+
+The planner (graph → partition) decides *what* to fuse; this module
+decides *who runs it*.  Every executor advertises the pattern it
+implements (``kind``), its backend, and a qualification predicate over an
+:class:`ExecContext`; ``find`` returns the highest-priority qualifying
+executor.  Consumers get two entry points:
+
+* :func:`plan_block` — plan a whole transformer block for a config and
+  bind every planned segment to an executor (the one API
+  ``models/layers.py``, ``launch/*`` and the benchmarks consume).
+* :func:`mlp_executor` — resolve an MLP execution callable for a given
+  ``ftl_mode``; ``'auto'`` is plan-driven: the partitioner's chosen
+  schedule selects between the Pallas fused kernel, the portable scan
+  executor, and the layer-per-layer baseline.
+
+Adding a new layer kind = one IR builder (graph.py) + one registry entry
+here — no per-consumer wiring.
+
+Kernel imports are lazy (inside the run functions) so the planning side
+of ``repro.core.ftl`` stays importable without pulling in Pallas.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from . import executor_xla, graph, partition
+from .partition import ChainPlan
+from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError, solve
+
+
+# ---------------------------------------------------------------------------
+# registry core
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecContext:
+    """Everything an executor needs to decide whether it qualifies."""
+
+    kind: str                    # 'mlp' | 'attention' | 'gemm'
+    platform: str                # 'tpu' | 'cpu' | 'gpu'
+    schedule: str                # 'fused' | 'partial' | 'unfused'
+    m: int = 0
+    d_model: int = 0
+    d_ff: int = 0
+    dtype: str = "bfloat16"
+    gated: bool = False
+    act: str = "gelu"
+
+
+@dataclasses.dataclass(frozen=True)
+class Executor:
+    """A registered implementation of one planned-group pattern."""
+
+    name: str
+    kind: str
+    backend: str                 # 'pallas' | 'xla'
+    priority: int
+    qualifies: Callable[[ExecContext], bool]
+    run: Callable | None = None
+
+
+_REGISTRY: dict[str, Executor] = {}
+
+
+def register(ex: Executor, *, override: bool = False) -> Executor:
+    if ex.name in _REGISTRY and not override:
+        raise ValueError(f"executor {ex.name!r} already registered")
+    _REGISTRY[ex.name] = ex
+    return ex
+
+
+def get(name: str) -> Executor:
+    return _REGISTRY[name]
+
+
+def executors(kind: str | None = None) -> list[Executor]:
+    exs = [e for e in _REGISTRY.values() if kind is None or e.kind == kind]
+    return sorted(exs, key=lambda e: -e.priority)
+
+
+def find(kind: str, ctx: ExecContext) -> Executor:
+    """Highest-priority executor of ``kind`` that qualifies for ``ctx``."""
+    for ex in executors(kind):
+        if ex.qualifies(ctx):
+            return ex
+    raise LookupError(f"no executor for kind={kind!r} ctx={ctx}")
+
+
+def platform() -> str:
+    return jax.default_backend()
+
+
+# ---------------------------------------------------------------------------
+# built-in MLP executors
+# ---------------------------------------------------------------------------
+
+def _run_pallas_fused_mlp(x, w1, w2, wg, b1, b2, *, act,
+                          vmem_budget=DEFAULT_VMEM_BUDGET):
+    from repro.kernels import ops  # lazy: Pallas stack
+    return ops.fused_mlp(x, w1, w2, wg, b1, b2, act=act, backend="pallas")
+
+
+def _run_pallas_partial_mlp(x, w1, w2, wg, b1, b2, *, act,
+                            vmem_budget=DEFAULT_VMEM_BUDGET):
+    """Partial schedule on the Pallas kernels: the paper's fused
+    GEMM+activation kernel for the up projection, a plain GEMM kernel for
+    the down projection (non-gated only — the gated epilogue has no
+    dedicated kernel yet)."""
+    from repro.kernels import ops
+    *lead, m, k = x.shape
+    xf = x.reshape(-1, k)
+    h = ops.gemm_act(xf, w1, b1, act=act, backend="pallas")
+    y = ops.gemm(h, w2, backend="pallas")
+    if b2 is not None:
+        y = y + b2
+    return y.reshape(*lead, m, w2.shape[1])
+
+
+@functools.lru_cache(maxsize=512)
+def _scan_tile(m: int, d_model: int, d_ff: int, dtype: str, gated: bool,
+               act: str, vmem_budget: int) -> int:
+    """Token-tile for the scan executor from its own kernel policy: the
+    scan tiles M only, so K/F/N stay whole and the solver picks the
+    largest M tile that fits the budget.  Falls back to a power-of-two
+    divisor when even the smallest tile does not fit (XLA will still run —
+    the budget is a planning target, not a hard limit on this backend)."""
+    g = graph.mlp_graph(m=m, d_model=d_model, d_ff=d_ff, dtype=dtype,
+                        gated=gated, act=act)
+    try:
+        plan = solve(g.group(0, g.n_ops), vmem_budget=vmem_budget,
+                     whole_dims=frozenset({"K", "F", "N"}))
+        return plan.tile("M")
+    except InfeasibleError:
+        for cand in (1024, 512, 256, 128):
+            if m % cand == 0 and cand < m:
+                return cand
+        return m
+
+
+def _run_xla_scan_mlp(x, w1, w2, wg, b1, b2, *, act,
+                      vmem_budget=DEFAULT_VMEM_BUDGET):
+    m = x.shape[-2]
+    tile = _scan_tile(m, w1.shape[0], w1.shape[1], str(x.dtype),
+                      wg is not None, act, vmem_budget)
+    return executor_xla.mlp_scan(x, w1, w2, wg, b1, b2, act=act, tile_m=tile)
+
+
+def _run_xla_partial_mlp(x, w1, w2, wg, b1, b2, *, act,
+                         vmem_budget=DEFAULT_VMEM_BUDGET):
+    m = x.shape[-2]
+    tile = _scan_tile(m, w1.shape[0], w1.shape[1], str(x.dtype),
+                      wg is not None, act, vmem_budget)
+    return executor_xla.mlp_partial_scan(x, w1, w2, wg, b1, b2, act=act,
+                                         tile_m=tile)
+
+
+def _run_xla_unfused_mlp(x, w1, w2, wg, b1, b2, *, act,
+                         vmem_budget=DEFAULT_VMEM_BUDGET):
+    from repro.distributed.act_sharding import constrain  # lazy: no cycle
+    from repro.kernels import ref
+    h = x @ w1
+    if b1 is not None:
+        h = h + b1
+    h = ref.act_fn(act)(h.astype(jnp.float32)).astype(x.dtype)
+    if wg is not None:
+        h = h * (x @ wg)
+    h = constrain(h, "ffn_hidden")
+    y = h @ w2
+    if b2 is not None:
+        y = y + b2
+    return y
+
+
+def _run_pallas_attention(q, k, v, **kw):
+    from repro.kernels import ops
+    return ops.attention(q, k, v, backend="pallas", **kw)
+
+
+def _run_ref_attention(q, k, v, **kw):
+    from repro.kernels import ops
+    return ops.attention(q, k, v, backend="ref", **kw)
+
+
+def _run_pallas_gemm(x, w):
+    from repro.kernels import ops
+    return ops.gemm(x, w, backend="pallas")
+
+
+def _run_xla_gemm(x, w):
+    return x @ w
+
+
+register(Executor(
+    name="pallas_fused_mlp", kind="mlp", backend="pallas", priority=100,
+    qualifies=lambda c: c.platform == "tpu" and c.schedule == "fused",
+    run=_run_pallas_fused_mlp))
+register(Executor(
+    name="pallas_partial_mlp", kind="mlp", backend="pallas", priority=90,
+    qualifies=lambda c: (c.platform == "tpu" and c.schedule == "partial"
+                         and not c.gated),
+    run=_run_pallas_partial_mlp))
+register(Executor(
+    name="xla_scan_mlp", kind="mlp", backend="xla", priority=50,
+    qualifies=lambda c: c.schedule == "fused",
+    run=_run_xla_scan_mlp))
+register(Executor(
+    name="xla_partial_scan_mlp", kind="mlp", backend="xla", priority=40,
+    qualifies=lambda c: c.schedule == "partial",
+    run=_run_xla_partial_mlp))
+register(Executor(
+    name="xla_unfused_mlp", kind="mlp", backend="xla", priority=10,
+    qualifies=lambda c: True,
+    run=_run_xla_unfused_mlp))
+register(Executor(
+    name="pallas_flash_attention", kind="attention", backend="pallas",
+    priority=100,
+    qualifies=lambda c: c.platform == "tpu" and c.schedule != "unfused",
+    run=_run_pallas_attention))
+register(Executor(
+    name="xla_ref_attention", kind="attention", backend="xla", priority=10,
+    qualifies=lambda c: True,
+    run=_run_ref_attention))
+register(Executor(
+    name="pallas_gemm", kind="gemm", backend="pallas", priority=100,
+    qualifies=lambda c: c.platform == "tpu",
+    run=_run_pallas_gemm))
+register(Executor(
+    name="xla_gemm", kind="gemm", backend="xla", priority=10,
+    qualifies=lambda c: True,
+    run=_run_xla_gemm))
+
+
+# ---------------------------------------------------------------------------
+# block-level planning: the one API every consumer goes through
+# ---------------------------------------------------------------------------
+
+def _segment_kind(seg: partition.Segment) -> str:
+    names = seg.op_names()
+    if any(n.startswith("attn.") for n in names):
+        return "attention"
+    if any(n.startswith("mlp.") or n.startswith("gemm") for n in names):
+        return "mlp" if any(n.startswith("mlp.") for n in names) else "gemm"
+    return "gemm"
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupBinding:
+    segment: partition.Segment
+    kind: str
+    executor: str
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """A planned transformer block with per-segment executor bindings."""
+
+    chain: ChainPlan
+    bindings: tuple[GroupBinding, ...]
+    platform: str
+
+    @property
+    def graph(self) -> graph.OpGraph:
+        return self.chain.graph
+
+    @property
+    def schedule(self) -> str:
+        return self.chain.schedule
+
+    @property
+    def traffic_bytes(self) -> int:
+        return self.chain.traffic_bytes
+
+    def _sub_schedule(self, prefix: str) -> str:
+        ops = [op.name for op in self.graph.ops
+               if op.name.startswith(prefix)]
+        segs = [s for s in self.chain.segments
+                if any(n.startswith(prefix) for n in s.op_names())]
+        if not ops or not segs:
+            return "none"
+        if len(segs) == 1:
+            return "fused"
+        if len(segs) == len(ops):
+            return "unfused"
+        return "partial"
+
+    @property
+    def mlp_schedule(self) -> str:
+        return self._sub_schedule("mlp.")
+
+    @property
+    def attention_schedule(self) -> str:
+        return self._sub_schedule("attn.")
+
+    def summary(self) -> str:
+        lines = [self.chain.summary(), f"  executors ({self.platform}):"]
+        for b in self.bindings:
+            lines.append(
+                f"    [{b.segment.lo}:{b.segment.hi}] {b.kind:9s} -> "
+                f"{b.executor}"
+            )
+        return "\n".join(lines)
+
+
+def _freeze(d: Mapping[str, int] | None):
+    return tuple(sorted(d.items())) if d else None
+
+
+@functools.lru_cache(maxsize=128)
+def _plan_block_cached(cfg, m: int, dtype: str | None, vmem_budget: int,
+                       sharded: tuple | None, plat: str,
+                       residual: bool) -> BlockPlan:
+    g = graph.block_graph(cfg, m=m, dtype=dtype, residual=residual)
+    chain = partition.plan_chain(
+        g, vmem_budget=vmem_budget,
+        sharded_sizes=dict(sharded) if sharded else None)
+    shell = BlockPlan(chain=chain, bindings=(), platform=plat)
+    sub = {"mlp": shell.mlp_schedule, "attention": shell.attention_schedule}
+    bindings = []
+    for seg in chain.segments:
+        kind = _segment_kind(seg)
+        # qualification uses the sub-chain's own fusion state: a split
+        # attention core must not bind to the flash kernel, etc.
+        sched = sub.get(kind, chain.schedule)
+        sched = chain.schedule if sched == "none" else sched
+        ctx = ExecContext(
+            kind=kind, platform=plat, schedule=sched,
+            m=m, d_model=cfg.d_model,
+            d_ff=cfg.moe_d_ff if cfg.is_moe else cfg.d_ff,
+            dtype=dtype or cfg.dtype, gated=cfg.mlp_gated, act=cfg.mlp_act)
+        bindings.append(GroupBinding(segment=seg, kind=kind,
+                                     executor=find(kind, ctx).name))
+    return BlockPlan(chain=chain, bindings=tuple(bindings), platform=plat)
+
+
+def plan_block(
+    cfg,
+    *,
+    m: int,
+    dtype: str | None = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    sharded_sizes: Mapping[str, int] | None = None,
+    residual: bool = True,
+) -> BlockPlan:
+    """Plan one transformer block of ``cfg`` at ``m`` tokens and bind every
+    planned fusion group to the best qualifying executor."""
+    return _plan_block_cached(cfg, m, dtype, vmem_budget,
+                              _freeze(sharded_sizes), platform(), residual)
+
+
+# ---------------------------------------------------------------------------
+# MLP mode resolution for models/layers.py
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1024)
+def _mlp_executor_cached(mode: str, m: int, d_model: int, d_ff: int,
+                         dtype: str, gated: bool, act: str,
+                         vmem_budget: int, plat: str) -> Executor:
+    if mode == "off":
+        ex = get("xla_unfused_mlp")
+    elif mode == "fused":
+        # explicit request for the Pallas kernel (interpret mode off-TPU)
+        ex = get("pallas_fused_mlp")
+    elif mode == "scan":
+        ex = get("xla_scan_mlp")
+    elif mode == "auto":
+        g = graph.mlp_graph(m=m, d_model=d_model, d_ff=d_ff, dtype=dtype,
+                            gated=gated, act=act)
+        try:
+            schedule = partition.plan_chain(g, vmem_budget=vmem_budget
+                                            ).schedule
+        except InfeasibleError:
+            schedule = "unfused"
+        ctx = ExecContext(kind="mlp", platform=plat, schedule=schedule,
+                          m=m, d_model=d_model, d_ff=d_ff, dtype=dtype,
+                          gated=gated, act=act)
+        ex = find("mlp", ctx)
+    else:
+        raise ValueError(f"unknown ftl_mode {mode!r}")
+    if vmem_budget != DEFAULT_VMEM_BUDGET:
+        # run under the budget the schedule was resolved with, not the
+        # module default (affects the scan executors' token-tile choice)
+        ex = dataclasses.replace(
+            ex, run=functools.partial(ex.run, vmem_budget=vmem_budget))
+    return ex
+
+
+def mlp_executor(
+    mode: str,
+    *,
+    m: int,
+    d_model: int,
+    d_ff: int,
+    dtype: str,
+    gated: bool,
+    act: str,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> Executor:
+    """Resolve the MLP executor for ``ftl_mode`` at the given shapes.
+
+    ``'auto'`` is plan-driven: the fusion partitioner's chosen schedule
+    picks the implementation (Pallas fused kernel on TPU, scan executor
+    for a fused/partial schedule elsewhere, layer-per-layer baseline when
+    the planner rejects fusion)."""
+    return _mlp_executor_cached(mode, m, d_model, d_ff, dtype, gated, act,
+                                vmem_budget, platform())

@@ -97,7 +97,9 @@ def solve(
                 for j in range(i + 1, len(names)):
                     opt[names[j]] = cons[names[j]].size
                 rep = evaluate(group, opt, cons, double_buffer=double_buffer)
-                if (rep.traffic_bytes, 0, 0) >= state.best_key and rep.traffic_bytes > state.best_key[0]:
+                # (t, 0, 0) >= best_key can only hold via t > best traffic
+                # (dma >= 1 always), so the compound test reduces to this:
+                if rep.traffic_bytes > state.best_key[0]:
                     continue
             dfs(i + 1, tiles)
         tiles.pop(name, None)

@@ -50,8 +50,15 @@ def axis_size(mesh: Mesh, axes) -> int:
 
 
 def _div(mesh: Mesh, dim: int, axes) -> Any:
-    """``axes`` if ``dim`` divides evenly over them, else None (replicate)."""
-    return axes if dim % axis_size(mesh, axes) == 0 else None
+    """``axes`` if ``dim`` divides evenly over them, else None (replicate).
+
+    Singleton axis tuples collapse to the bare name — identical meaning to
+    GSPMD, but keeps specs comparable to hand-written ``P("data", ...)``."""
+    if dim % axis_size(mesh, axes) != 0:
+        return None
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
 
 
 def _path_names(path) -> tuple[str, ...]:

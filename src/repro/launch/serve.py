@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.ftl import InfeasibleError
+from repro.core.ftl import registry as ftl_registry
 from repro.models import model as M
 from repro.train import steps as S
 
@@ -52,7 +54,20 @@ class ServeEngine:
         self.active: list[Request | None] = [None] * batch_slots
         self.cache = M.init_cache(cfg, batch_slots, max_seq)
         self.pos = np.zeros(batch_slots, np.int32)
-        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+        # Graph-level FTL plan for the steady-state prefill shape: the
+        # whole block (projections + attention core + MLP) goes through
+        # one partitioner and the executor registry binds each planned
+        # fusion group.  Families without a plannable block (pure SSM)
+        # serve without one.
+        try:
+            self.block_plan = ftl_registry.plan_block(cfg, m=max_seq)
+        except (ValueError, InfeasibleError):
+            self.block_plan = None
+        self.stats = {
+            "prefills": 0, "decode_steps": 0, "tokens": 0,
+            "ftl_schedule": (self.block_plan.schedule
+                             if self.block_plan else "n/a"),
+        }
 
     # ------------------------------------------------------------------
     def _admit(self, req: Request, slot: int, extras: dict[str, Any]):
@@ -162,6 +177,8 @@ def main() -> None:
             for i in range(args.requests)]
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
                       max_seq=args.max_seq)
+    if eng.block_plan is not None:
+        print(eng.block_plan.summary())
     t0 = time.time()
     done = eng.run(reqs, extras)
     dt = time.time() - t0

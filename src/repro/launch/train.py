@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.ftl import InfeasibleError
+from repro.core.ftl import registry as ftl_registry
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.optim import OptConfig
@@ -41,6 +43,14 @@ def build(args):
         cfg = cfg.reduced()
     if args.ftl_mode:
         cfg = dataclasses.replace(cfg, ftl_mode=args.ftl_mode)
+
+    # graph-level FTL plan of one block at the training token count — the
+    # same planner/registry path mlp_layer dispatches through at run time
+    try:
+        bp = ftl_registry.plan_block(cfg, m=args.seq)
+        logging.info("FTL block plan (m=%d):\n%s", args.seq, bp.summary())
+    except (ValueError, InfeasibleError) as e:
+        logging.info("FTL block plan unavailable: %s", e)
 
     mesh = None
     in_sh = out_sh = None

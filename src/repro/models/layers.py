@@ -14,9 +14,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.ftl import executor_xla
+from repro.core.ftl import registry
 from repro.distributed.act_sharding import constrain
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 Params = dict[str, Any]
 
@@ -308,46 +308,25 @@ def init_mlp(cfg, key, d_ff: int | None = None) -> Params:
 
 def mlp_layer(cfg, p: Params, x: jax.Array, *, ftl_mode: str | None = None
               ) -> jax.Array:
-    """MLP with selectable FTL execution mode.
+    """MLP dispatched through the FTL executor registry.
 
     off   — layer-per-layer jnp: the hidden tensor is materialized (XLA
             fuses the activation epilogue but not GEMM→GEMM).  Baseline.
     fused — the fused_mlp Pallas kernel (FTL plan → BlockSpecs).
     scan  — portable FTL schedule via lax.scan token tiling.
-    auto  — fused on TPU, scan elsewhere.
+    auto  — plan-driven: the fusion partitioner's chosen schedule picks
+            the executor (Pallas fused kernel on TPU, scan executor for a
+            fused/partial schedule elsewhere, baseline when the planner
+            rejects fusion).
     """
     mode = ftl_mode if ftl_mode is not None else cfg.ftl_mode
     wg = p.get("wg", {}).get("w")
     b1 = p["w1"].get("b")
     b2 = p["w2"].get("b")
-    if mode == "auto":
-        mode = "fused" if jax.default_backend() == "tpu" else "scan"
-    if mode == "off":
-        h = x @ p["w1"]["w"]
-        if b1 is not None:
-            h = h + b1
-        h = ref.act_fn(cfg.mlp_act)(h.astype(jnp.float32)).astype(x.dtype)
-        if wg is not None:
-            h = h * (x @ wg)
-        h = constrain(h, "ffn_hidden")
-        y = h @ p["w2"]["w"]
-        if b2 is not None:
-            y = y + b2
-        return y
-    if mode == "fused":
-        return ops.fused_mlp(
-            x, p["w1"]["w"], p["w2"]["w"], wg, b1, b2,
-            act=cfg.mlp_act, backend="pallas",
-        )
-    if mode == "scan":
-        s = x.shape[-2]
-        tile = s
-        for cand in (1024, 512, 256, 128):
-            if s % cand == 0 and cand < s:
-                tile = cand
-                break
-        return executor_xla.mlp_scan(
-            x, p["w1"]["w"], p["w2"]["w"], wg, b1, b2,
-            act=cfg.mlp_act, tile_m=tile,
-        )
-    raise ValueError(f"unknown ftl_mode {mode!r}")
+    w1, w2 = p["w1"]["w"], p["w2"]["w"]
+    exe = registry.mlp_executor(
+        mode,
+        m=x.shape[-2], d_model=w1.shape[0], d_ff=w1.shape[1],
+        dtype=str(x.dtype), gated=wg is not None, act=cfg.mlp_act,
+    )
+    return exe.run(x, w1, w2, wg, b1, b2, act=cfg.mlp_act)

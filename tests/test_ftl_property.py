@@ -1,4 +1,7 @@
 """Hypothesis property tests on the FTL solver's invariants."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

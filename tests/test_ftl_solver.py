@@ -53,6 +53,38 @@ class TestSolveBasics:
             assert t % c.alignment == 0 or t == c.size, (d, t, c.alignment)
 
 
+def test_pruned_search_matches_exhaustive_optimum():
+    """Pin for the simplified optimality prune (solver.py): the pruned
+    branch-and-bound must return the same optimum as brute force over the
+    full candidate lattice."""
+    import itertools
+
+    from repro.core.ftl.cost import evaluate
+
+    g = ftl.fusion.mlp(m=512, d_model=256, d_ff=512, fuse=True)
+    budget = 2 * MB
+    plan = ftl.solve(g, vmem_budget=budget)
+
+    cons = ftl.build_dim_constraints(g)
+    names = sorted(cons)
+    best_key = None
+    for combo in itertools.product(*(cons[n].candidates for n in names)):
+        tiles = dict(zip(names, combo))
+        rep = evaluate(g, tiles, cons)
+        if rep.vmem_bytes > budget:
+            continue
+        steps = 1
+        for _, c in rep.grid:
+            steps *= c
+        key = (rep.traffic_bytes, rep.dma_transfers, steps)
+        if best_key is None or key < best_key:
+            best_key = key
+    steps = 1
+    for _, c in plan.report.grid:
+        steps *= c
+    assert (plan.traffic_bytes, plan.dma_transfers, steps) == best_key
+
+
 # ---------------------------------------------------------------------------
 # the paper's benchmark: GEMM+GeLU fusion wins
 # ---------------------------------------------------------------------------
