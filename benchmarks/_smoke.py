@@ -1,0 +1,8 @@
+"""Shared BENCH_SMOKE gate: one truthiness rule for every section."""
+
+import os
+
+
+def smoke() -> bool:
+    """True when the CI bench-smoke job (or a user) sets BENCH_SMOKE."""
+    return os.environ.get("BENCH_SMOKE", "") not in ("", "0")

@@ -8,13 +8,17 @@ from __future__ import annotations
 
 from repro.core import ftl
 
+from ._smoke import smoke
+
 MB = 1 << 20
 
 
 def run() -> list[dict]:
+    seqs = (1024,) if smoke() else (4096, 16384, 32768)
+    dhs = (128,) if smoke() else (128, 256)
     rows = []
-    for seq in (4096, 16384, 32768):
-        for dh in (128, 256):
+    for seq in seqs:
+        for dh in dhs:
             fused = ftl.plan_attention(q_len=seq, kv_len=seq, head_dim=dh,
                                        vmem_budget=96 * MB)
             groups = ftl.fusion.attention(q_len=seq, kv_len=seq,

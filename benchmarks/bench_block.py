@@ -1,0 +1,197 @@
+"""Whole-block execution: layer-per-layer vs BlockPlan-driven (tentpole).
+
+Two comparisons per arch:
+
+* **measured** — one transformer block executed for real on this host,
+  reference path (``models/layers.block_layer`` with ``plan=None``,
+  ``ftl_mode='off'``) vs plan-driven (``registry.run_block`` dispatching
+  every planned segment to its bound executor).  Reduced configs so the
+  wall-clock numbers are honest on CPU; on TPU the same harness times the
+  Pallas kernels the registry binds there.
+* **modeled** — the partitioner's HBM traffic for the plan's schedule vs
+  the all-unfused partition at production dims (the number the measured
+  speedup should track on HBM-bound shapes).
+
+Writes ``BENCH_block.json`` (consumed by the CI bench-smoke artifact) and
+prints both tables as CSV.  ``BENCH_SMOKE=1`` shrinks shapes/iterations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.ftl import InfeasibleError, executor_block, partition, registry
+from repro.models import layers
+
+from . import _smoke
+
+MB = 1 << 20
+OUT = "BENCH_block.json"
+
+# knob overrides (tests monkeypatch these); None resolves from the
+# BENCH_SMOKE env at call time like every other section
+ARCHS = None
+EXEC_TOKENS = None
+MODEL_TOKENS = None
+ITERS = None
+
+
+def _archs():
+    if ARCHS is not None:
+        return ARCHS
+    if _smoke.smoke():
+        return ("llama3.2-3b", "yi-6b")
+    return ("llama3.2-3b", "yi-6b", "granite-20b")
+
+
+def _exec_tokens():
+    if EXEC_TOKENS is not None:
+        return EXEC_TOKENS
+    return (64,) if _smoke.smoke() else (128, 512)
+
+
+def _model_tokens():
+    if MODEL_TOKENS is not None:
+        return MODEL_TOKENS
+    return 512 if _smoke.smoke() else 8192
+
+
+def _iters():
+    if ITERS is not None:
+        return ITERS
+    return 2 if _smoke.smoke() else 10
+
+
+def _layer_params(cfg, key):
+    ks = jax.random.split(key, 2)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": layers.init_norm(cfg.d_model, cfg.norm, dt),
+        "attn": layers.init_attention(cfg, ks[0]),
+        "ln2": layers.init_norm(cfg.d_model, cfg.norm, dt),
+        "mlp": layers.init_mlp(cfg, ks[1]),
+    }
+
+
+def _best_ms(fn, x, iters):
+    fn(x).block_until_ready()  # compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return round(1e3 * best, 3)
+
+
+def exec_rows() -> list[dict]:
+    """Measured: reference vs plan-driven execution of one block."""
+    rows = []
+    for arch in _archs():
+        base = configs.get_config(arch).reduced()
+        base = dataclasses.replace(base, dtype="float32", remat=False)
+        cfg_auto = dataclasses.replace(base, ftl_mode="auto")
+        cfg_off = dataclasses.replace(base, ftl_mode="off")
+        p = _layer_params(base, jax.random.PRNGKey(0))
+        for m in _exec_tokens():
+            plan = registry.plan_block(cfg_auto, m=m, dtype="float32")
+            positions = jnp.arange(m)
+            key = jax.random.PRNGKey(1)
+            x = jax.random.normal(key, (1, m, base.d_model), jnp.float32)
+
+            def plan_fn(xx, plan=plan, p=p, positions=positions):
+                return registry.run_block(plan, p, xx, positions=positions)
+
+            def ref_fn(xx, cfg=cfg_off, p=p, positions=positions):
+                return layers.block_layer(cfg, p, xx, positions=positions)
+
+            ms_plan = _best_ms(jax.jit(plan_fn), x, _iters())
+            ms_ref = _best_ms(jax.jit(ref_fn), x, _iters())
+            row = {
+                "arch": arch,
+                "m": m,
+                "schedule": plan.schedule,
+                "executors": executor_block.resolved_executors(
+                    plan,
+                    m=m,
+                    dtype="float32",
+                ),
+                "ref_ms": ms_ref,
+                "plan_ms": ms_plan,
+                "speedup": round(ms_ref / ms_plan, 3) if ms_plan else "-",
+            }
+            rows.append(row)
+    return rows
+
+
+def traffic_rows() -> list[dict]:
+    """Modeled: planned vs all-unfused HBM traffic at production dims."""
+    rows = []
+    m = _model_tokens()
+    for arch in _archs():
+        cfg = configs.get_config(arch)
+        try:
+            plan = registry.plan_block(cfg, m=m)
+        except (ValueError, InfeasibleError):
+            continue
+        g = plan.graph
+        try:
+            unfused = partition.plan_fixed(
+                g,
+                partition.all_cuts(g),
+                vmem_budget=plan.chain.vmem_budget,
+            )
+            unf = unfused.traffic_bytes
+        except InfeasibleError:
+            unf = None
+        row = {
+            "arch": arch,
+            "m": m,
+            "schedule": plan.schedule,
+            "plan_MiB": round(plan.traffic_bytes / MB, 1),
+        }
+        if unf:
+            row["unfused_MiB"] = round(unf / MB, 1)
+            row["traffic_red_%"] = round(100 * (1 - plan.traffic_bytes / unf), 1)
+        else:
+            row["unfused_MiB"] = "infeasible"
+            row["traffic_red_%"] = "-"
+        rows.append(row)
+    return rows
+
+
+def _print_csv(rows: list[dict]) -> None:
+    if not rows:
+        print("(no rows)")
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "-")).replace(",", ";") for k in keys))
+
+
+def main() -> None:
+    ex = exec_rows()
+    tr = traffic_rows()
+    print("# measured: one block, reference vs plan-driven")
+    _print_csv(ex)
+    print("# modeled: planned vs unfused traffic at production dims")
+    _print_csv(tr)
+    result = {
+        "platform": registry.platform(),
+        "smoke": _smoke.smoke(),
+        "measured": ex,
+        "modeled_traffic": tr,
+    }
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ from repro.core import ftl
 from repro.core.ftl import graph, partition
 from repro.core.ftl.cost import evaluate
 
+from ._smoke import smoke
 from .hw_profiles import (SIRACUSA_CLUSTER, SIRACUSA_NPU, TwoTierHW,
                           runtime_model_fused, runtime_model_unfused)
 
@@ -98,9 +99,10 @@ def bench_row(m: int, hw: TwoTierHW) -> dict:
 def run() -> list[dict]:
     rows = []
     for hw in (SIRACUSA_CLUSTER, SIRACUSA_NPU):
-        rows.append(bench_row(3072, hw))
+        rows.append(bench_row(512 if smoke() else 3072, hw))
     # L2-overflow cliff sweep on the NPU profile (spill starts ~M=683)
-    for m in (256, 512, 1024, 3072, 12288):
+    sweep = (256, 1024) if smoke() else (256, 512, 1024, 3072, 12288)
+    for m in sweep:
         rows.append(bench_row(m, SIRACUSA_NPU))
     return rows
 

@@ -7,6 +7,8 @@ import time
 
 from repro.core import ftl
 
+from ._smoke import smoke
+
 MB = 1 << 20
 
 
@@ -23,8 +25,9 @@ CASES = [
 
 
 def run() -> list[dict]:
+    cases = [CASES[0], CASES[3]] if smoke() else CASES
     rows = []
-    for name, make in CASES:
+    for name, make in cases:
         g = make()
         t0 = time.perf_counter()
         plan = ftl.solve(g, vmem_budget=96 * MB)

@@ -13,9 +13,15 @@ from __future__ import annotations
 from repro import configs
 from repro.core.ftl import InfeasibleError, graph, partition, registry
 
+from ._smoke import smoke
+
 MB = 1 << 20
 TOKENS = 8192                  # per-device microbatch tokens (train_4k-ish)
 TP = 16                        # model-axis shards
+
+
+def _tokens() -> int:
+    return 512 if smoke() else TOKENS
 
 
 def arch_mlp_dims(cfg):
@@ -27,6 +33,7 @@ def arch_mlp_dims(cfg):
 
 
 def run() -> list[dict]:
+    tokens = _tokens()
     rows = []
     for arch in configs.ARCHS:
         cfg = configs.get_config(arch)
@@ -37,7 +44,7 @@ def run() -> list[dict]:
             continue
         d, f, gated = dims
         f_shard = f // TP if f % TP == 0 else f
-        g = graph.mlp_graph(m=TOKENS, d_model=d, d_ff=f_shard, gated=gated,
+        g = graph.mlp_graph(m=tokens, d_model=d, d_ff=f_shard, gated=gated,
                             act=cfg.mlp_act)
         chosen = partition.plan_chain(g, vmem_budget=96 * MB)
         unfused = partition.plan_fixed(g, partition.all_cuts(g),
@@ -52,7 +59,7 @@ def run() -> list[dict]:
         except InfeasibleError:
             partial = None
         try:
-            block = registry.plan_block(cfg, m=TOKENS, vmem_budget=96 * MB)
+            block = registry.plan_block(cfg, m=tokens, vmem_budget=96 * MB)
             block_sched = block.schedule
         except (ValueError, InfeasibleError):
             block_sched = "-"

@@ -11,7 +11,6 @@ via launch/train.py, which shares this code path).
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 60]
 """
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -21,8 +21,8 @@ partition.ChainPlan / registry.BlockPlan per chain, consumed by
 auto.plan_mlp / auto.plan_attention remain as thin cached wrappers over
 the graph → partition path.
 """
-from . import (auto, constraints, cost, executor_xla, fusion, graph, ir,
-               partition, plan, registry, solver)
+from . import (auto, constraints, cost, executor_block, executor_xla,
+               fusion, graph, ir, partition, plan, registry, solver)
 from .auto import MLPPlanOutcome, plan_attention, plan_mlp
 from .constraints import build_dim_constraints
 from .cost import CostReport, evaluate
@@ -33,7 +33,7 @@ from .ir import Dim, FusionGroup, KernelPolicy, OpNode, Role, TensorSpec
 from .partition import ChainPlan, Segment, all_cuts, plan_chain, plan_fixed
 from .plan import FusionComparison, TilePlan, compare
 from .registry import BlockPlan, ExecContext, Executor, mlp_executor, \
-    plan_block
+    plan_block, run_block
 from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError, solve
 
 __all__ = [
@@ -44,9 +44,10 @@ __all__ = [
     "gemm_chain_graph", "mlp_graph",
     "ChainPlan", "Segment", "all_cuts", "plan_chain", "plan_fixed",
     "BlockPlan", "ExecContext", "Executor", "mlp_executor", "plan_block",
+    "run_block",
     "build_dim_constraints", "evaluate", "solve", "compare",
     "DEFAULT_VMEM_BUDGET", "InfeasibleError",
     "MLPPlanOutcome", "plan_attention", "plan_mlp",
-    "auto", "constraints", "cost", "executor_xla", "fusion", "graph", "ir",
-    "partition", "plan", "registry", "solver",
+    "auto", "constraints", "cost", "executor_block", "executor_xla",
+    "fusion", "graph", "ir", "partition", "plan", "registry", "solver",
 ]

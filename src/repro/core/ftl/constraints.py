@@ -16,15 +16,10 @@ the solver/cost model needs (is-contract, needs-accumulator).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Mapping
 
 from .ir import (
-    Dim,
     FusionGroup,
-    KernelPolicy,
-    LinkKind,
-    OpNode,
     Role,
     TensorSpec,
     aligned_divisors,

@@ -28,11 +28,10 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import math
 from typing import Mapping, Sequence
 
 from .constraints import DimConstraint, accumulator_tensors
-from .ir import FusionGroup, Role, TensorSpec, dtype_bytes
+from .ir import FusionGroup, Role, TensorSpec
 
 
 @dataclasses.dataclass(frozen=True)

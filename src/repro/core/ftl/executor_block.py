@@ -1,0 +1,267 @@
+"""Plan-driven execution of a whole transformer block.
+
+:func:`run_block` is the runtime counterpart of ``registry.plan_block``:
+it walks the planned segments in chain order and dispatches each one to
+its bound executor — the GEMM executors for the QKV/output projections,
+flash attention (Pallas on TPU, the jnp oracle elsewhere) for the
+attention core, and the fused/partial/scan MLP executors for the MLP —
+stitching the pre-norm residual structure (norms + residual adds) between
+segments exactly like the hand-sequenced ``models/layers.py`` path.
+
+Fallback contract: every binding is *requalified* at run time against the
+actual platform and shapes (``ExecContext``).  A plan made on TPU runs
+unchanged on CPU because each disqualified binding falls back, per
+segment, to the highest-priority executor that does qualify — the XLA
+reference path in the worst case.  Numerics: with every stage on its
+reference executor the output is bitwise identical to the layer-per-layer
+path; planned executors (scan tiling, Pallas kernels) agree within fp32
+tolerance (pinned by ``tests/test_block_exec.py``).
+
+Model-side imports (norm/rope live in ``repro.models.layers``) are lazy so
+the planning half of ``repro.core.ftl`` stays importable on its own.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from . import registry
+
+
+def _runtime_ctx(
+    plan: registry.BlockPlan,
+    kind: str,
+    schedule: str,
+    m: int,
+    dtype: str,
+) -> registry.ExecContext:
+    cfg = plan.cfg
+    return registry.ExecContext(
+        kind=kind,
+        platform=registry.platform(),
+        schedule=schedule,
+        m=m,
+        d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff if cfg.is_moe else cfg.d_ff,
+        dtype=dtype,
+        gated=cfg.mlp_gated,
+        act=cfg.mlp_act,
+    )
+
+
+def _sub_schedule(plan: registry.BlockPlan, kind: str) -> str:
+    if kind == "attention":
+        sched = plan.attention_schedule
+    elif kind == "mlp":
+        sched = plan.mlp_schedule
+    else:
+        sched = plan.schedule
+    if sched == "none":
+        # the plan has no ops of this kind (e.g. an MLP-only block graph
+        # asked for its attention stage): the attention core is always
+        # executable fused (flash streams KV); the MLP conservatively
+        # falls back to the layer-per-layer baseline
+        return "fused" if kind == "attention" else "unfused"
+    return sched
+
+
+def _stage_executor(
+    plan: registry.BlockPlan,
+    kind: str,
+    ctx: registry.ExecContext,
+) -> registry.Executor:
+    """The plan's bound executor for ``kind``, or the runtime fallback.
+
+    All bindings of one kind share a single executor (qualification used
+    the sub-chain schedule at plan time), so the first binding decides;
+    when it no longer qualifies — planned on another platform, shapes
+    changed — ``registry.find`` rebinds the best qualifying executor.
+    """
+    for b in plan.bindings:
+        if b.kind == kind:
+            ex = registry.get(b.executor)
+            if ex.qualifies(ctx):
+                return ex
+            break
+    return registry.find(kind, ctx)
+
+
+def _resolve_gemm(plan, mode, m, dtype) -> registry.Executor:
+    if mode == "off":
+        return registry.get("xla_gemm")
+    ctx = _runtime_ctx(plan, "gemm", plan.schedule, m, dtype)
+    return _stage_executor(plan, "gemm", ctx)
+
+
+def _resolve_attention(plan, mode, m, dtype) -> registry.Executor:
+    if mode == "off":
+        # the baseline attention path was backend='auto': flash on TPU,
+        # the jnp oracle elsewhere — exactly what a 'fused' qualification
+        # resolves to
+        ctx = _runtime_ctx(plan, "attention", "fused", m, dtype)
+        return registry.find("attention", ctx)
+    ctx = _runtime_ctx(
+        plan,
+        "attention",
+        _sub_schedule(plan, "attention"),
+        m,
+        dtype,
+    )
+    return _stage_executor(plan, "attention", ctx)
+
+
+def _resolve_mlp(
+    plan,
+    mode,
+    m,
+    dtype,
+    *,
+    d_model=None,
+    d_ff=None,
+    gated=None,
+) -> registry.Executor:
+    cfg = plan.cfg
+    if mode in ("off", "fused", "scan"):
+        # explicit override modes keep their historical meaning; the plan
+        # stays authoritative only for 'auto'
+        if d_model is None:
+            d_model = cfg.d_model
+        if d_ff is None:
+            d_ff = cfg.moe_d_ff if cfg.is_moe else cfg.d_ff
+        if gated is None:
+            gated = cfg.mlp_gated
+        return registry.mlp_executor(
+            mode,
+            m=m,
+            d_model=d_model,
+            d_ff=d_ff,
+            dtype=dtype,
+            gated=gated,
+            act=cfg.mlp_act,
+        )
+    ctx = _runtime_ctx(plan, "mlp", _sub_schedule(plan, "mlp"), m, dtype)
+    return _stage_executor(plan, "mlp", ctx)
+
+
+def resolved_executors(
+    plan: registry.BlockPlan,
+    *,
+    m: int | None = None,
+    dtype: str | None = None,
+) -> dict[str, str]:
+    """Executor names :func:`run_block` would dispatch to right now.
+
+    Reporting/diagnostics hook (serve stats, benchmarks): resolves each
+    stage exactly as :func:`run_block` does — honoring ``cfg.ftl_mode``
+    and requalifying the plan's bindings against the current platform at
+    shape ``m``/``dtype`` (defaulting to the planned ones) — without
+    executing anything.
+    """
+    m = m if m is not None else plan.m
+    dtype = dtype or plan.dtype
+    mode = plan.cfg.ftl_mode
+    return {
+        "gemm": _resolve_gemm(plan, mode, m, dtype).name,
+        "attention": _resolve_attention(plan, mode, m, dtype).name,
+        "mlp": _resolve_mlp(plan, mode, m, dtype).name,
+    }
+
+
+def _project(ex: registry.Executor, x, p: dict[str, Any]):
+    """One planned projection GEMM (``linear`` routed through a binding)."""
+    w = p["w"]
+    if ex.backend == "pallas":
+        # the Pallas GEMM kernel is 2-D; flatten leading dims around it
+        *lead, k = x.shape
+        y = ex.run(x.reshape(-1, k), w).reshape(*lead, w.shape[1])
+    else:
+        y = ex.run(x, w)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def run_block(
+    plan: registry.BlockPlan,
+    params: dict[str, Any],
+    x,  # (B, S, D)
+    *,
+    positions=None,  # (S,) — defaults to arange(S)
+    causal: bool = True,
+    window: int | None = None,
+    use_rope: bool = True,
+    ftl_mode: str | None = None,  # overrides plan.cfg.ftl_mode
+):
+    """Execute one pre-norm transformer block per its :class:`BlockPlan`.
+
+    ``params`` is one layer's parameter dict from ``models/model.py``
+    (``ln1``/``attn``/``ln2``/``mlp``).  Stages present in ``params`` but
+    absent from the plan (e.g. local attention of a hybrid config whose
+    plannable block is MLP-only) execute through the runtime-fallback
+    executor for their kind, so the block always runs end to end.
+
+    ``cfg.ftl_mode`` (overridable per call via ``ftl_mode=``) keeps its
+    pre-plan meaning as the escape hatch: with
+    ``'off'`` every stage is pinned to the executors the hand-sequenced
+    baseline used (plain XLA projections, unfused MLP, the platform's
+    default attention kernel), so the compute graph is exactly the
+    pre-plan one; ``'fused'``/``'scan'`` force that MLP executor; any
+    other mode (``'auto'``) makes the plan's bindings authoritative.
+    """
+    from repro.distributed.act_sharding import constrain  # lazy: no cycle
+    from repro.models import layers as L  # lazy: no cycle
+
+    cfg = plan.cfg
+    b, s, _ = x.shape
+    dtype = str(x.dtype)
+    mode = ftl_mode if ftl_mode is not None else cfg.ftl_mode
+
+    if "attn" in params:
+        nh, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        if positions is None:
+            positions = jnp.arange(s)
+        gemm_ex = _resolve_gemm(plan, mode, s, dtype)
+        ap = params["attn"]
+        h = L.norm(params["ln1"], x, cfg.norm)
+        q = L._split_heads(_project(gemm_ex, h, ap["wq"]), nh)
+        k = L._split_heads(_project(gemm_ex, h, ap["wk"]), hk)
+        v = L._split_heads(_project(gemm_ex, h, ap["wv"]), hk)
+        if use_rope:
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+        q = constrain(q.transpose(0, 2, 1, 3), "heads_q")
+        k = constrain(k.transpose(0, 2, 1, 3), "heads_kv")
+        v = constrain(v.transpose(0, 2, 1, 3), "heads_kv")
+        attn_ex = _resolve_attention(plan, mode, s, dtype)
+        o = attn_ex.run(q, k, v, causal=causal, window=window)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, nh * dh)
+        x = constrain(x + _project(gemm_ex, o, ap["wo"]), "residual")
+
+    if "mlp" in params:
+        mp = params["mlp"]
+        w1, w2 = mp["w1"]["w"], mp["w2"]["w"]
+        wg = mp.get("wg", {}).get("w")
+        h = L.norm(params["ln2"], x, cfg.norm)
+        mlp_ex = _resolve_mlp(
+            plan,
+            mode,
+            s,
+            dtype,
+            d_model=w1.shape[0],
+            d_ff=w1.shape[1],
+            gated=wg is not None,
+        )
+        y = mlp_ex.run(
+            h,
+            w1,
+            w2,
+            wg,
+            mp["w1"].get("b"),
+            mp["w2"].get("b"),
+            act=cfg.mlp_act,
+        )
+        x = constrain(x + y, "residual")
+
+    return x

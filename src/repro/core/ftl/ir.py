@@ -16,9 +16,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Iterable, Mapping, Sequence
-
-import numpy as np
+from typing import Mapping, Sequence
 
 # ---------------------------------------------------------------------------
 # dtypes: we avoid importing jax here so the solver is usable standalone.

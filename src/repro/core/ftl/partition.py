@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Iterable, Mapping, Sequence
+from typing import Iterable, Mapping
 
 from .graph import OpGraph
 from .plan import TilePlan

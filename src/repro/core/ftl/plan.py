@@ -12,11 +12,11 @@ A plan carries everything downstream consumers need:
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
+from typing import Sequence
 
 from .constraints import DimConstraint
 from .cost import CostReport
-from .ir import FusionGroup, Role
+from .ir import FusionGroup
 
 
 @dataclasses.dataclass

@@ -85,11 +85,28 @@ def executors(kind: str | None = None) -> list[Executor]:
 
 
 def find(kind: str, ctx: ExecContext) -> Executor:
-    """Highest-priority executor of ``kind`` that qualifies for ``ctx``."""
-    for ex in executors(kind):
+    """Highest-priority executor of ``kind`` that qualifies for ``ctx``.
+
+    Raises :class:`LookupError` spelling out the full qualification
+    context and every executor that was considered (name, backend,
+    priority), so a failed binding is diagnosable from the message alone.
+    """
+    considered = executors(kind)
+    for ex in considered:
         if ex.qualifies(ctx):
             return ex
-    raise LookupError(f"no executor for kind={kind!r} ctx={ctx}")
+    fields = ", ".join(
+        f"{f.name}={getattr(ctx, f.name)!r}"
+        for f in dataclasses.fields(ctx)
+    )
+    tried = ", ".join(
+        f"{e.name} (backend={e.backend}, priority={e.priority})"
+        for e in considered
+    ) or "<none registered for this kind>"
+    raise LookupError(
+        f"no executor of kind={kind!r} qualifies for "
+        f"ExecContext({fields}); considered in priority order: {tried}"
+    )
 
 
 def platform() -> str:
@@ -258,11 +275,19 @@ class GroupBinding:
 
 @dataclasses.dataclass(frozen=True)
 class BlockPlan:
-    """A planned transformer block with per-segment executor bindings."""
+    """A planned transformer block with per-segment executor bindings.
+
+    Carries the config and planning shape it was made for so
+    :func:`run_block` can execute it (and requalify bindings) without any
+    side-channel state.
+    """
 
     chain: ChainPlan
     bindings: tuple[GroupBinding, ...]
     platform: str
+    cfg: object = None
+    m: int = 0
+    dtype: str = ""
 
     @property
     def graph(self) -> graph.OpGraph:
@@ -319,7 +344,8 @@ def _plan_block_cached(cfg, m: int, dtype: str | None, vmem_budget: int,
     chain = partition.plan_chain(
         g, vmem_budget=vmem_budget,
         sharded_sizes=dict(sharded) if sharded else None)
-    shell = BlockPlan(chain=chain, bindings=(), platform=plat)
+    shell = BlockPlan(chain=chain, bindings=(), platform=plat, cfg=cfg,
+                      m=m, dtype=dtype or cfg.dtype)
     sub = {"mlp": shell.mlp_schedule, "attention": shell.attention_schedule}
     bindings = []
     for seg in chain.segments:
@@ -335,7 +361,8 @@ def _plan_block_cached(cfg, m: int, dtype: str | None, vmem_budget: int,
             dtype=dtype or cfg.dtype, gated=cfg.mlp_gated, act=cfg.mlp_act)
         bindings.append(GroupBinding(segment=seg, kind=kind,
                                      executor=find(kind, ctx).name))
-    return BlockPlan(chain=chain, bindings=tuple(bindings), platform=plat)
+    return BlockPlan(chain=chain, bindings=tuple(bindings), platform=plat,
+                     cfg=cfg, m=m, dtype=dtype or cfg.dtype)
 
 
 def plan_block(
@@ -409,3 +436,22 @@ def mlp_executor(
     the planner rejects fusion)."""
     return _mlp_executor_cached(mode, m, d_model, d_ff, dtype, gated, act,
                                 vmem_budget, platform())
+
+
+# ---------------------------------------------------------------------------
+# block execution: walk the plan, dispatch every segment
+# ---------------------------------------------------------------------------
+
+def run_block(plan: BlockPlan, params, x, **kwargs):
+    """Execute one transformer block through its :class:`BlockPlan`.
+
+    Walks the planned segments in order and dispatches each one to its
+    bound executor (Pallas flash attention / fused MLP kernels on TPU,
+    the XLA scan executors elsewhere), stitching the norms and residual
+    adds between segments.  Bindings are requalified against the runtime
+    shapes/platform; a binding that no longer qualifies falls back,
+    per segment, to the best qualifying (ultimately XLA reference)
+    executor.  See :mod:`repro.core.ftl.executor_block`.
+    """
+    from . import executor_block  # lazy: keeps planning importable alone
+    return executor_block.run_block(plan, params, x, **kwargs)

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
-from .constraints import DimConstraint, build_dim_constraints
+from .constraints import build_dim_constraints
 from .cost import CostReport, evaluate, min_traffic_bound, vmem_usage
 from .ir import FusionGroup
 from .plan import TilePlan

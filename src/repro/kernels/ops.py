@@ -15,7 +15,6 @@ import functools
 from typing import Literal
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import ftl
 

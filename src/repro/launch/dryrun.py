@@ -38,7 +38,7 @@ from repro import configs                              # noqa: E402
 from repro.configs import SHAPES, get_config, get_shape  # noqa: E402
 from repro.data.pipeline import make_batch_shapes      # noqa: E402
 from repro.distributed.sharding import (               # noqa: E402
-    batch_pspecs, cache_pspecs, dp_axes, param_pspecs, to_shardings)
+    batch_pspecs, dp_axes, param_pspecs, to_shardings)
 from repro.launch.mesh import make_production_mesh     # noqa: E402
 from repro.models import model as M                    # noqa: E402
 from repro.optim import OptConfig                      # noqa: E402

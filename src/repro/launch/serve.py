@@ -67,7 +67,82 @@ class ServeEngine:
             "prefills": 0, "decode_steps": 0, "tokens": 0,
             "ftl_schedule": (self.block_plan.schedule
                              if self.block_plan else "n/a"),
+            "block_exec": "n/a",
         }
+
+    # ------------------------------------------------------------------
+    def execute_block_plan(self):
+        """Run the stored BlockPlan for real at the serving shape.
+
+        Executes one transformer block of the engine's own parameters
+        through ``registry.run_block`` on a (1, max_seq, d_model)
+        activation — the steady-state prefill shape the plan was made
+        for.  This is where every binding is requalified on the serving
+        host (per-segment fallback), and it prices the plan in wall-clock
+        terms instead of only reporting modeled traffic.  Records the
+        resolved executors and timing in ``stats``; returns the stats
+        entry (None when the model has no plan or no plannable layer).
+        """
+        if self.block_plan is None:
+            return None
+        p, kind = self._first_block_params()
+        if p is None or ("attn" not in p and "mlp" not in p):
+            return None
+        from repro.core.ftl import executor_block
+        cfg = self.cfg
+        window = cfg.local_window if kind == "local" else None
+        x = jax.random.normal(
+            jax.random.PRNGKey(0), (1, self.max_seq, cfg.d_model)
+        ).astype(cfg.dtype)
+        positions = jnp.arange(self.max_seq)
+        run = jax.jit(lambda xx: ftl_registry.run_block(
+            self.block_plan, p, xx, positions=positions, window=window))
+        run(x).block_until_ready()              # compile
+        t0 = time.perf_counter()
+        y = run(x)
+        y.block_until_ready()
+        dt = time.perf_counter() - t0
+        entry = {
+            "ms": round(1e3 * dt, 3),
+            "executors": executor_block.resolved_executors(
+                self.block_plan, m=self.max_seq, dtype=str(x.dtype)),
+            "finite": bool(jnp.isfinite(y).all()),
+        }
+        self.stats["block_exec"] = entry
+        return entry
+
+    def _first_block_params(self):
+        """(params, mixer kind) of the first plan-executable layer.
+
+        Prefers a full attention(+MLP) layer; hybrid configs whose leading
+        positions are recurrent fall back to any MLP-bearing one (the plan
+        is MLP-only there and run_block executes just that stage).
+        Returns (None, None) when no layer can execute the plan.
+        """
+        kinds, n_full, rem_kinds = M._layer_split(self.cfg)
+        if n_full:
+            pool = [(k, f"pos{i}") for i, k in enumerate(kinds)]
+
+            def get(key):
+                # slice only this position's subtree, not the whole stack
+                return jax.tree.map(lambda a: a[0],
+                                    self.params["layers"][key])
+        elif rem_kinds:
+            pool = [(k, f"rem{i}") for i, k in enumerate(rem_kinds)]
+
+            def get(key):
+                return self.params["rem"][key]
+        else:
+            return None, None
+        for kind, key in pool:
+            if kind in ("attn", "local"):
+                return get(key), kind
+        # no attention layer: any MLP-bearing layer can run the
+        # (MLP-only) plan
+        if bool(self.cfg.d_ff) and not self.cfg.is_moe:
+            kind, key = pool[0]
+            return get(key), kind
+        return None, None
 
     # ------------------------------------------------------------------
     def _admit(self, req: Request, slot: int, extras: dict[str, Any]):
@@ -179,6 +254,11 @@ def main() -> None:
                       max_seq=args.max_seq)
     if eng.block_plan is not None:
         print(eng.block_plan.summary())
+        exec_stats = eng.execute_block_plan()
+        if exec_stats is not None:
+            print(f"block plan executed @ m={args.max_seq}: "
+                  f"{exec_stats['ms']} ms, executors "
+                  f"{exec_stats['executors']}")
     t0 = time.time()
     done = eng.run(reqs, extras)
     dt = time.time() - t0

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.ftl import InfeasibleError
+from repro.core.ftl import InfeasibleError, executor_block
 from repro.core.ftl import registry as ftl_registry
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
@@ -44,13 +44,25 @@ def build(args):
     if args.ftl_mode:
         cfg = dataclasses.replace(cfg, ftl_mode=args.ftl_mode)
 
-    # graph-level FTL plan of one block at the training token count — the
-    # same planner/registry path mlp_layer dispatches through at run time
+    # graph-level FTL plan of one block at the training token count.
+    # This is not just a report: model.forward resolves the same cached
+    # plan (per cfg/m/dtype) and executes every block through
+    # registry.run_block, so the schedule logged here is the schedule the
+    # train step actually runs.
+    bp = None
     try:
         bp = ftl_registry.plan_block(cfg, m=args.seq)
-        logging.info("FTL block plan (m=%d):\n%s", args.seq, bp.summary())
+        execs = executor_block.resolved_executors(bp, m=args.seq)
+        state = ("executed by every forward block"
+                 if cfg.ftl_mode != "off" else
+                 "report only — ftl_mode='off' runs the baseline; pass "
+                 "--ftl-mode auto to execute it")
+        logging.info("FTL block plan (m=%d, %s):\n%s\n"
+                     "  runtime executors: %s",
+                     args.seq, state, bp.summary(), execs)
     except (ValueError, InfeasibleError) as e:
-        logging.info("FTL block plan unavailable: %s", e)
+        logging.info("FTL block plan unavailable (layer-per-layer path): "
+                     "%s", e)
 
     mesh = None
     in_sh = out_sh = None
@@ -93,6 +105,7 @@ def build(args):
             f"gnorm {m.get('grad_norm', 0):.3f} lr {m.get('lr', 0):.2e}",
             flush=True),
     )
+    loop.block_plan = bp          # surfaced for tooling/tests
     return loop
 
 

@@ -330,3 +330,43 @@ def mlp_layer(cfg, p: Params, x: jax.Array, *, ftl_mode: str | None = None
         dtype=str(x.dtype), gated=wg is not None, act=cfg.mlp_act,
     )
     return exe.run(x, w1, w2, wg, b1, b2, act=cfg.mlp_act)
+
+
+# ---------------------------------------------------------------------------
+# whole-block execution — BlockPlan as the execution authority
+# ---------------------------------------------------------------------------
+
+def block_layer(
+    cfg,
+    p: Params,
+    x: jax.Array,                    # (B, S, D)
+    *,
+    positions: jax.Array,
+    plan=None,                       # registry.BlockPlan | None
+    causal: bool = True,
+    window: int | None = None,
+    use_rope: bool = True,
+) -> jax.Array:
+    """One pre-norm attention+MLP block, plan-driven when ``plan`` is set.
+
+    With a :class:`~repro.core.ftl.registry.BlockPlan` this replaces the
+    hand-sequenced attention+MLP calls: ``registry.run_block`` walks the
+    planned segments and dispatches each to its bound executor, falling
+    back per segment when a binding does not qualify at runtime.  With
+    ``plan=None`` it is the layer-per-layer reference path (the baseline
+    the equivalence tests and benchmarks compare against).
+    """
+    if plan is not None:
+        # the caller's cfg stays authoritative for the execution mode even
+        # if the plan was made from a differently-moded config
+        return registry.run_block(
+            plan, p, x, positions=positions, causal=causal, window=window,
+            use_rope=use_rope, ftl_mode=cfg.ftl_mode)
+    h = norm(p["ln1"], x, cfg.norm)
+    o = attention_layer(cfg, p["attn"], h, positions=positions,
+                        causal=causal, window=window, use_rope=use_rope)
+    x = constrain(x + o, "residual")
+    if "mlp" in p:
+        h = norm(p["ln2"], x, cfg.norm)
+        x = constrain(x + mlp_layer(cfg, p["mlp"], h), "residual")
+    return x

@@ -30,12 +30,15 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.ftl import InfeasibleError
+from repro.core.ftl import registry as ftl_registry
 from repro.distributed.act_sharding import constrain
 from repro.models import recurrent
 from repro.models.layers import (
     attention_decode,
     attention_layer,
     attention_prefill,
+    block_layer,
     init_attention,
     init_kv_cache,
     init_linear,
@@ -130,8 +133,16 @@ def _apply_ffn(cfg, p: Params, x):
     return jnp.zeros_like(x), jnp.float32(0.0)
 
 
-def _apply_layer(cfg, p: Params, kind: str, x, *, positions, ctx):
+def _apply_layer(cfg, p: Params, kind: str, x, *, positions, ctx, plan=None):
     """Pre-norm residual layer.  Returns (x, aux)."""
+    if plan is not None and kind in ("attn", "local") and "mlp" in p:
+        # BlockPlan-driven execution: the planned segments (QKV/output
+        # projections, attention core, MLP) dispatch through their bound
+        # executors; norms and residuals are stitched by run_block.
+        window = cfg.local_window if kind == "local" else None
+        x = block_layer(cfg, p, x, positions=positions, plan=plan,
+                        window=window)
+        return x, jnp.float32(0.0)
     x = x + _apply_mixer(cfg, p, kind, x, positions=positions, ctx=ctx)
     x = constrain(x, "residual")
     d, aux = _apply_ffn(cfg, p, x)
@@ -179,14 +190,15 @@ def _init_stack(cfg, key, kinds: list[str], n: int) -> Params:
     return jax.vmap(one)(keys)
 
 
-def _scan_layers(cfg, stack: Params, kinds: list[str], x, *, positions, ctx):
+def _scan_layers(cfg, stack: Params, kinds: list[str], x, *, positions, ctx,
+                 plan=None):
     """lax.scan over periods; returns (x, aux_sum)."""
 
     def body(carry, pp):
         h, aux = carry
         for i, kind in enumerate(kinds):
             h, a = _apply_layer(cfg, pp[f"pos{i}"], kind, h,
-                                positions=positions, ctx=ctx)
+                                positions=positions, ctx=ctx, plan=plan)
             aux = aux + a
         return (h, aux), None
 
@@ -196,6 +208,26 @@ def _scan_layers(cfg, stack: Params, kinds: list[str], x, *, positions, ctx):
         )
     (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stack)
     return x, aux
+
+
+@functools.lru_cache(maxsize=256)
+def _block_plan(cfg, m: int, dtype: str):
+    """Cached per-(cfg, m, dtype) whole-block FTL plan, or None.
+
+    The one plan every block of the forward pass executes through
+    (``registry.plan_block`` additionally caches per platform).  None —
+    and the hand-sequenced path — when there is nothing to plan:
+    ``ftl_mode='off'`` is the full escape hatch (run_block would pin the
+    baseline executors anyway, so skipping the solver at trace time gives
+    the identical compute graph for free), pure SSM stacks have no
+    plannable block, and MoE FFNs route (not a chain).
+    """
+    if cfg.is_moe or cfg.ftl_mode == "off":
+        return None
+    try:
+        return ftl_registry.plan_block(cfg, m=m, dtype=dtype)
+    except (ValueError, InfeasibleError):
+        return None
 
 
 # ===========================================================================
@@ -273,11 +305,12 @@ def forward(cfg, params: Params, batch: dict[str, jax.Array]
     kinds, _, rem_kinds = _layer_split(cfg)
 
     x = constrain(_embed(cfg, params["embed"], tokens), "residual")
+    plan = _block_plan(cfg, s, cfg.dtype)
     x, aux = _scan_layers(cfg, params["layers"], kinds, x,
-                          positions=positions, ctx=ctx)
+                          positions=positions, ctx=ctx, plan=plan)
     for i, kind in enumerate(rem_kinds):
         x, a = _apply_layer(cfg, params["rem"][f"rem{i}"], kind, x,
-                            positions=positions, ctx=ctx)
+                            positions=positions, ctx=ctx, plan=plan)
         aux = aux + a
     x = norm(params["final_norm"], x, cfg.norm)
     return _unembed(cfg, params, x), aux

@@ -22,7 +22,6 @@ Counted:
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Any
 

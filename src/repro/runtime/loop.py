@@ -16,7 +16,6 @@ import signal
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.ckpt import CheckpointManager
 from repro.runtime.monitor import StragglerMonitor

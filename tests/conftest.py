@@ -2,8 +2,6 @@
 leak here — launch/dryrun.py sets it in its own process only)."""
 import os
 
-import pytest
-
 # fail fast if someone set the dry-run flag globally
 assert "xla_force_host_platform_device_count=512" not in \
     os.environ.get("XLA_FLAGS", ""), \

@@ -3,7 +3,6 @@ accounting, model-FLOPs sanity — on hand-written HLO and on a real
 compiled module."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import configs
