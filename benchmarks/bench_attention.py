@@ -6,7 +6,8 @@ per head — the "exceeds L2" regime of the paper, at TPU scale.  Reports
 traffic and the HBM-bound speedup per (seq, head_dim)."""
 from __future__ import annotations
 
-from repro.core import ftl
+from repro.core import ftl, hw
+from repro.core.ftl import graph, partition
 
 from ._smoke import smoke
 
@@ -16,18 +17,20 @@ MB = 1 << 20
 def run() -> list[dict]:
     seqs = (1024,) if smoke() else (4096, 16384, 32768)
     dhs = (128,) if smoke() else (128, 256)
+    target = hw.TPU_V5E
     rows = []
     for seq in seqs:
         for dh in dhs:
-            fused = ftl.plan_attention(q_len=seq, kv_len=seq, head_dim=dh,
-                                       vmem_budget=96 * MB)
+            ag = graph.attention_graph(q_len=seq, kv_len=seq, head_dim=dh)
+            fused = partition.plan_fixed(
+                ag, (), target=target).segments[0].plan
             groups = ftl.fusion.attention(q_len=seq, kv_len=seq,
                                           head_dim=dh, fuse=False)
             unfused = []
             feasible = True
             for g in groups:
                 try:
-                    unfused.append(ftl.solve(g, vmem_budget=96 * MB))
+                    unfused.append(ftl.solve(g, target=target))
                 except ftl.InfeasibleError:
                     feasible = False
             score_bytes = seq * seq * 4

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core import hw
 from repro.core.ftl import InfeasibleError, executor_block, partition, registry
 from repro.models import layers
 
@@ -33,6 +34,10 @@ from . import _smoke
 
 MB = 1 << 20
 OUT = "BENCH_block.json"
+
+# memory-hierarchy targets the modeled-traffic table sweeps: the serving
+# TPU plus the paper's Siracusa-like RV32 hierarchy
+TARGETS = (hw.TPU_V5E, hw.RV32_L1_L2)
 
 # knob overrides (tests monkeypatch these); None resolves from the
 # BENCH_SMOKE env at call time like every other section
@@ -115,6 +120,7 @@ def exec_rows() -> list[dict]:
             row = {
                 "arch": arch,
                 "m": m,
+                "target": plan.target.name,
                 "schedule": plan.schedule,
                 "executors": executor_block.resolved_executors(
                     plan,
@@ -130,38 +136,48 @@ def exec_rows() -> list[dict]:
 
 
 def traffic_rows() -> list[dict]:
-    """Modeled: planned vs all-unfused HBM traffic at production dims."""
+    """Modeled: planned vs all-unfused backing-store traffic at production
+    dims, swept over memory-hierarchy targets (per-level bytes)."""
     rows = []
     m = _model_tokens()
     for arch in _archs():
         cfg = configs.get_config(arch)
-        try:
-            plan = registry.plan_block(cfg, m=m)
-        except (ValueError, InfeasibleError):
-            continue
-        g = plan.graph
-        try:
-            unfused = partition.plan_fixed(
-                g,
-                partition.all_cuts(g),
-                vmem_budget=plan.chain.vmem_budget,
-            )
-            unf = unfused.traffic_bytes
-        except InfeasibleError:
-            unf = None
-        row = {
-            "arch": arch,
-            "m": m,
-            "schedule": plan.schedule,
-            "plan_MiB": round(plan.traffic_bytes / MB, 1),
-        }
-        if unf:
-            row["unfused_MiB"] = round(unf / MB, 1)
-            row["traffic_red_%"] = round(100 * (1 - plan.traffic_bytes / unf), 1)
-        else:
-            row["unfused_MiB"] = "infeasible"
-            row["traffic_red_%"] = "-"
-        rows.append(row)
+        for target in TARGETS:
+            try:
+                plan = registry.plan_block(cfg, m=m, target=target)
+            except (ValueError, InfeasibleError):
+                continue
+            g = plan.graph
+            try:
+                unfused = partition.plan_fixed(
+                    g,
+                    partition.all_cuts(g),
+                    target=target,
+                )
+                unf = unfused.traffic_bytes
+            except InfeasibleError:
+                unf = None
+            row = {
+                "arch": arch,
+                "m": m,
+                "target": target.name,
+                "schedule": plan.schedule,
+                "plan_MiB": round(plan.traffic_bytes / MB, 1),
+                "plan_per_level_MiB": {
+                    name: round(b / MB, 1)
+                    for name, b in plan.per_level_traffic.items()
+                },
+                "plan_time_ms": round(1e3 * plan.chain.transfer_time_s, 3),
+            }
+            if unf:
+                row["unfused_MiB"] = round(unf / MB, 1)
+                row["traffic_red_%"] = round(
+                    100 * (1 - plan.traffic_bytes / unf), 1
+                )
+            else:
+                row["unfused_MiB"] = "infeasible"
+                row["traffic_red_%"] = "-"
+            rows.append(row)
     return rows
 
 

@@ -39,14 +39,15 @@ D_MODEL, D_FF = 768, 3072
 DTYPE = "int8"
 
 
-def plans(m: int, budget: int):
-    """Fused / unfused / matched-tiling plans via the graph partitioner."""
+def plans(m: int, target):
+    """Fused / unfused / matched-tiling plans via the graph partitioner,
+    priced on a first-class memory-hierarchy ``Target``."""
     g = graph.gemm_act_graph(m=m, k=D_MODEL, n=D_FF, dtype=DTYPE)
-    fused = partition.plan_fixed(g, (), vmem_budget=budget).segments[0].plan
+    fused = partition.plan_fixed(g, (), target=target).segments[0].plan
     unfused = [
         s.plan
         for s in partition.plan_fixed(g, partition.all_cuts(g),
-                                      vmem_budget=budget).segments
+                                      target=target).segments
     ]
     # matched tiling: evaluate each unfused op at the fused plan's tiles
     matched = []
@@ -54,14 +55,14 @@ def plans(m: int, budget: int):
         og = g.group(i, i + 1)
         cons = ftl.build_dim_constraints(og)
         tiles = {d: min(fused.tiles[d], cons[d].size) for d in og.dims}
-        matched.append(evaluate(og, tiles, cons))
+        matched.append(evaluate(og, tiles, cons, target=target))
     # the partitioner's own choice for this chain (reported per row)
-    chosen = partition.plan_chain(g, vmem_budget=budget)
+    chosen = partition.plan_chain(g, target=target)
     return fused, unfused, matched, chosen
 
 
 def bench_row(m: int, hw: TwoTierHW) -> dict:
-    fused, unfused, matched, chosen = plans(m, hw.scratch_bytes)
+    fused, unfused, matched, chosen = plans(m, hw.target())
     macs = m * D_MODEL * D_FF
     ew = m * D_FF
     inter = m * D_FF                           # int8 bytes
@@ -79,10 +80,14 @@ def bench_row(m: int, hw: TwoTierHW) -> dict:
     cmp_opt = ftl.compare(fused, unfused)
     m_traffic = sum(r.traffic_bytes for r in matched)
     m_dma = sum(r.dma_transfers for r in matched)
+    per_level = chosen.per_level_traffic
     return {
         "M": m,
         "hw": hw.name,
         "auto_schedule": chosen.schedule,
+        "plan_l2_MiB": round(per_level.get("l2", 0) / MB, 1),
+        "plan_l3_MiB": round(per_level.get("l3", 0) / MB, 1),
+        "plan_time_ms": round(1e3 * chosen.transfer_time_s, 2),
         "traffic_red_matched_%": round(
             100 * (1 - fused.traffic_bytes / m_traffic), 1),
         "dma_red_matched_%": round(

@@ -1,11 +1,14 @@
 """FTL solver performance: wall time + nodes explored across problem
-sizes (the paper's step-4 'solve' must be fast enough to run per layer at
-deployment time — Deeploy does this offline, we do it at trace time)."""
+sizes and memory-hierarchy targets (the paper's step-4 'solve' must be
+fast enough to run per layer at deployment time — Deeploy does this
+offline, we do it at trace time).  Swept over ≥2 Target presets so the
+branch-and-bound cost is known on both the VMEM-scale and the KiB-scale
+hierarchy."""
 from __future__ import annotations
 
 import time
 
-from repro.core import ftl
+from repro.core import ftl, hw
 
 from ._smoke import smoke
 
@@ -23,23 +26,37 @@ CASES = [
         m=8192, dims_kn=[4096, 4096, 4096, 4096], fuse=True)),
 ]
 
+TARGETS = (hw.TPU_V5E, hw.RV32_L1_L2)
+
 
 def run() -> list[dict]:
     cases = [CASES[0], CASES[3]] if smoke() else CASES
     rows = []
     for name, make in cases:
-        g = make()
-        t0 = time.perf_counter()
-        plan = ftl.solve(g, vmem_budget=96 * MB)
-        dt = time.perf_counter() - t0
-        rows.append({
-            "case": name,
-            "dims": len(g.dims),
-            "solve_ms": round(1e3 * dt, 1),
-            "nodes": plan.nodes_explored,
-            "traffic_MiB": round(plan.traffic_bytes / MB, 1),
-            "vmem_MiB": round(plan.vmem_bytes / MB, 1),
-        })
+        for target in TARGETS:
+            g = make()
+            t0 = time.perf_counter()
+            try:
+                plan = ftl.solve(g, target=target)
+            except ftl.InfeasibleError:
+                rows.append({"case": name, "target": target.name,
+                             "dims": len(g.dims),
+                             "solve_ms": round(
+                                 1e3 * (time.perf_counter() - t0), 1),
+                             "nodes": "-", "traffic_MiB": "infeasible",
+                             "vmem_MiB": "-", "time_ms": "-"})
+                continue
+            dt = time.perf_counter() - t0
+            rows.append({
+                "case": name,
+                "target": target.name,
+                "dims": len(g.dims),
+                "solve_ms": round(1e3 * dt, 1),
+                "nodes": plan.nodes_explored,
+                "traffic_MiB": round(plan.traffic_bytes / MB, 1),
+                "vmem_MiB": round(plan.vmem_bytes / MB, 2),
+                "time_ms": round(1e3 * plan.transfer_time_s, 3),
+            })
     return rows
 
 

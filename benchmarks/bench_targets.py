@@ -1,0 +1,151 @@
+"""Target sweep: the same planning problem priced on every memory-
+hierarchy preset (tentpole artifact + CI gate).
+
+For each ``repro.core.hw`` preset (tpu_v5e, cpu_cache, and the paper's
+Siracusa-like rv32_l1_l2) this prices the paper's ViT-MLP benchmark op
+(GEMM→GeLU, int8) fused vs layer-per-layer — reporting *per-level*
+modeled traffic, DMA counts and modeled transfer time — and measures a
+real wall-clock: the fp32 MLP executed through the XLA scan executor at
+the token tile each target's plan picked (the tile differs per target,
+so the measurement is target-sensitive even on one host).
+
+Writes ``BENCH_targets.json`` (uploaded by the CI bench-smoke job).
+
+**CI gate**: if the fused plan's modeled backing-store traffic exceeds
+the unfused schedule's on ANY preset the run fails — the paper's
+qualitative result (fusion removes the intermediate round trip) must
+hold on every hierarchy we claim to plan for.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hw
+from repro.core.ftl import executor_xla, graph, partition, registry
+from repro.core.ftl.solver import InfeasibleError
+
+from ._smoke import smoke
+
+MB = 1 << 20
+OUT = "BENCH_targets.json"
+
+# paper ViT-Base MLP first half: d=768, d_ff=3072, int8
+D_MODEL, D_FF = 768, 3072
+DTYPE = "int8"
+
+
+def _m() -> int:
+    return 512 if smoke() else 3072
+
+
+def _chain_stats(chain) -> dict:
+    return {
+        "schedule": chain.schedule,
+        "traffic_bytes": chain.traffic_bytes,
+        "per_level_traffic_bytes": chain.per_level_traffic,
+        "dma_transfers": chain.dma_transfers,
+        "modeled_time_ms": round(1e3 * chain.transfer_time_s, 4),
+    }
+
+
+def _measured_mlp_ms(target: hw.Target, m: int) -> dict:
+    """Wall-clock of the fp32 MLP through the scan executor, tiled the
+    way *this target's* plan says (registry._scan_tile — the exact
+    runtime hook run_block uses)."""
+    d, f = 256, 1024
+    tile = registry._scan_tile(m, d, f, "float32", False, "gelu", target)
+    k = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(k[0], (m, d), jnp.float32)
+    w1 = jax.random.normal(k[1], (d, f), jnp.float32) * d ** -0.5
+    w2 = jax.random.normal(k[2], (f, d), jnp.float32) * f ** -0.5
+
+    fn = jax.jit(lambda xx: executor_xla.mlp_scan(
+        xx, w1, w2, None, None, None, act="gelu", tile_m=tile))
+    fn(x).block_until_ready()          # compile
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return {"tile_m": tile, "wall_ms": round(1e3 * best, 3)}
+
+
+def target_row(target: hw.Target, m: int) -> dict:
+    g = graph.gemm_act_graph(m=m, k=D_MODEL, n=D_FF, dtype=DTYPE)
+    t0 = time.perf_counter()
+    chosen = partition.plan_chain(g, target=target)
+    solve_ms = round(1e3 * (time.perf_counter() - t0), 1)
+    fused = partition.plan_fixed(g, (), target=target)
+    unfused = partition.plan_fixed(g, partition.all_cuts(g), target=target)
+    gate_ok = fused.traffic_bytes <= unfused.traffic_bytes
+    return {
+        "target": target.name,
+        "levels": [
+            {"name": lv.name, "capacity_bytes": lv.capacity_bytes,
+             "bw_bytes_per_s": lv.bw_bytes_per_s,
+             "dma_setup_s": lv.dma_setup_s}
+            for lv in target.levels
+        ],
+        "paper_op": {
+            "m": m, "d_model": D_MODEL, "d_ff": D_FF, "dtype": DTYPE,
+            "chosen": _chain_stats(chosen),
+            "fused": _chain_stats(fused),
+            "unfused": _chain_stats(unfused),
+            "traffic_red_%": round(
+                100 * (1 - fused.traffic_bytes / unfused.traffic_bytes), 1),
+        },
+        "solve_ms": solve_ms,
+        "measured_mlp": _measured_mlp_ms(target, m),
+        "gate_ok": gate_ok,
+    }
+
+
+def run() -> dict:
+    m = _m()
+    rows = []
+    for target in hw.presets():
+        try:
+            rows.append(target_row(target, m))
+        except InfeasibleError as e:
+            rows.append({"target": target.name, "error": str(e),
+                         "gate_ok": False})
+    return {
+        "smoke": smoke(),
+        "m": m,
+        "gate": "fused modeled backing-store traffic <= unfused on every "
+                "preset",
+        "targets": rows,
+    }
+
+
+def main() -> None:
+    result = run()
+    for row in result["targets"]:
+        if "error" in row:
+            print(f"{row['target']}: INFEASIBLE — {row['error']}")
+            continue
+        op = row["paper_op"]
+        print(f"{row['target']}: {op['chosen']['schedule']} chosen, "
+              f"fused {op['fused']['traffic_bytes'] / MB:.1f} MiB "
+              f"{op['fused']['per_level_traffic_bytes']} vs unfused "
+              f"{op['unfused']['traffic_bytes'] / MB:.1f} MiB "
+              f"({op['traffic_red_%']}% red), "
+              f"solve {row['solve_ms']} ms, "
+              f"exec tile_m={row['measured_mlp']['tile_m']} "
+              f"{row['measured_mlp']['wall_ms']} ms")
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {OUT}")
+    bad = [r["target"] for r in result["targets"] if not r.get("gate_ok")]
+    if bad:
+        raise RuntimeError(
+            f"target gate FAILED: fused modeled backing-store traffic "
+            f"exceeds unfused (or planning infeasible) on: {bad}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ partitioner, executors bound by the registry) is reported per arch too."""
 from __future__ import annotations
 
 from repro import configs
+from repro.core import hw
 from repro.core.ftl import InfeasibleError, graph, partition, registry
 
 from ._smoke import smoke
@@ -46,20 +47,20 @@ def run() -> list[dict]:
         f_shard = f // TP if f % TP == 0 else f
         g = graph.mlp_graph(m=tokens, d_model=d, d_ff=f_shard, gated=gated,
                             act=cfg.mlp_act)
-        chosen = partition.plan_chain(g, vmem_budget=96 * MB)
+        chosen = partition.plan_chain(g, target=hw.TPU_V5E)
         unfused = partition.plan_fixed(g, partition.all_cuts(g),
-                                       vmem_budget=96 * MB)
+                                       target=hw.TPU_V5E)
         try:
-            fused = partition.plan_fixed(g, (), vmem_budget=96 * MB)
+            fused = partition.plan_fixed(g, (), target=hw.TPU_V5E)
         except InfeasibleError:
             fused = None
         try:
             partial = partition.plan_fixed(g, (g.n_ops - 1,),
-                                           vmem_budget=96 * MB)
+                                           target=hw.TPU_V5E)
         except InfeasibleError:
             partial = None
         try:
-            block = registry.plan_block(cfg, m=tokens, vmem_budget=96 * MB)
+            block = registry.plan_block(cfg, m=tokens, target=hw.TPU_V5E)
             block_sched = block.schedule
         except (ValueError, InfeasibleError):
             block_sched = "-"

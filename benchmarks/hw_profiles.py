@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core import hw as hwlib
+
 KB = 1 << 10
 MB = 1 << 20
 
@@ -37,6 +39,23 @@ class TwoTierHW:
     ew_per_s: float             # elementwise (GeLU-class) elems/s, cluster
     gemm_on_accel: bool = False
     dma_setup_s: float = 2e-6   # per-transfer setup cost (drives DMA count)
+
+    def target(self) -> hwlib.Target:
+        """This profile as a planning :class:`repro.core.hw.Target`:
+        scratchpad fast level, L2 + (unbounded-above) L3 backing — the
+        same machine description the solver, partitioner and registry
+        consume, so the runtime model and the planner agree."""
+        return hwlib.Target(
+            name=self.name,
+            levels=(
+                hwlib.MemoryLevel("l1", self.scratch_bytes, 8e9),
+                hwlib.MemoryLevel("l2", self.l2_bytes, self.l2_bw,
+                                  dma_setup_s=self.dma_setup_s),
+                hwlib.MemoryLevel("l3", 1 << 50, self.l3_bw,
+                                  dma_setup_s=self.dma_setup_s),
+            ),
+            flops=2.0 * self.macs_per_s,
+        )
 
 
 # 8 RV32 cores, 2 int8 MACs/cycle/core SIMD @ ~370 MHz, ~50 % kernel

@@ -1,19 +1,32 @@
-"""Explore FTL plans interactively: budget sweeps, fusion decisions, and
+"""Explore FTL plans interactively: target sweeps, fusion decisions, and
 the sharding-constraint family.
 
-Shows, for a chosen MLP, how the optimal schedule changes with the VMEM
-budget — the paper's Fig. 3 regime (fusion wins) and the small-budget
-regime where the auto-planner rejects fusion (beyond-paper extension).
+Shows, for a chosen MLP, how the optimal schedule changes with the
+memory-hierarchy target — across the presets (tpu_v5e / cpu_cache /
+rv32_l1_l2) and across fast-level capacities of one target: the paper's
+Fig. 3 regime (fusion wins) and the small-budget regime where the
+partitioner rejects fusion (beyond-paper extension).
 
 Run:  PYTHONPATH=src python examples/ftl_explore.py [--m 8192] [--d 4096]
-      [--f 11008]
+      [--f 11008] [--target rv32_l1_l2]
 """
 import argparse
 
-from repro.core import ftl
+from repro.core import hw
 from repro.core.ftl import graph, partition, registry
 
 KB, MB = 1 << 10, 1 << 20
+
+
+def _mlp_row(g, target):
+    from repro.core.ftl import InfeasibleError
+    chain = partition.plan_chain(g, target=target)
+    unf = partition.plan_fixed(g, partition.all_cuts(g), target=target)
+    try:
+        fused = partition.plan_fixed(g, (), target=target)
+    except InfeasibleError:
+        fused = None
+    return chain, fused, unf
 
 
 def main() -> None:
@@ -22,52 +35,70 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=4096)
     ap.add_argument("--f", type=int, default=11008)
     ap.add_argument("--gated", action="store_true")
+    ap.add_argument("--target", default="tpu_v5e",
+                    help="preset to sweep fast-level capacities of")
     ap.add_argument("--arch", default=None,
                     help="also show the whole-block graph plan for an arch")
     args = ap.parse_args()
 
+    g = graph.mlp_graph(m=args.m, d_model=args.d, d_ff=args.f,
+                        gated=args.gated)
     print(f"MLP m={args.m} d_model={args.d} d_ff={args.f} "
           f"gated={args.gated}\n")
+
+    # --- preset sweep: same chain, three machines ------------------------
+    print(f"{'target':>12} {'decision':>9} {'chosen MiB':>11} "
+          f"{'unfused MiB':>12} {'time ms':>9}  per-level")
+    for t in hw.presets():
+        chain, fused, unf = _mlp_row(g, t)
+        per = ", ".join(f"{n}={b / MB:.1f}M"
+                        for n, b in chain.per_level_traffic.items())
+        print(f"{t.name:>12} {chain.schedule:>9} "
+              f"{chain.traffic_bytes / MB:11.1f} "
+              f"{unf.traffic_bytes / MB:12.1f} "
+              f"{1e3 * chain.transfer_time_s:9.2f}  {per}")
+
+    # --- capacity sweep on one target ------------------------------------
+    base = hw.get_target(args.target)
+    print(f"\nfast-level capacity sweep on {args.target}:")
     print(f"{'budget':>10} {'decision':>9} {'fused MiB':>10} "
-          f"{'unfused MiB':>12} {'reduction':>10} {'tile_m':>7} {'tile_f':>7}")
+          f"{'unfused MiB':>12} {'reduction':>10}")
     for budget in (512 * KB, 2 * MB, 8 * MB, 32 * MB, 96 * MB, 256 * MB):
-        out = ftl.plan_mlp(m=args.m, d_model=args.d, d_ff=args.f,
-                           gated=args.gated, vmem_budget=budget)
-        unf = sum(p.traffic_bytes for p in out.unfused)
-        if out.fused is None:
-            print(f"{budget/MB:9.1f}M {'infeasible':>9} {'-':>10} "
-                  f"{unf/MB:11.1f} {'-':>10}")
+        t = base.with_fast_capacity(budget)
+        chain, fused, unf = _mlp_row(g, t)
+        if fused is None:
+            print(f"{budget / MB:9.1f}M {'infeasible':>9} {'-':>10} "
+                  f"{unf.traffic_bytes / MB:11.1f} {'-':>10}")
             continue
-        red = 1 - out.fused.traffic_bytes / unf
-        print(f"{budget/MB:9.1f}M "
-              f"{'FUSE' if out.use_fused else 'split':>9} "
-              f"{out.fused.traffic_bytes/MB:10.1f} {unf/MB:11.1f} "
-              f"{100*red:9.1f}% {out.fused.tile('M'):7d} "
-              f"{out.fused.tile('F'):7d}")
+        red = 1 - fused.traffic_bytes / unf.traffic_bytes
+        print(f"{budget / MB:9.1f}M "
+              f"{'FUSE' if chain.schedule == 'fused' else 'split':>9} "
+              f"{fused.traffic_bytes / MB:10.1f} "
+              f"{unf.traffic_bytes / MB:11.1f} {100 * red:9.1f}%")
 
     # sharding constraints: the same MLP on a 16-way TP shard
     print("\nwith d_ff sharded 16-way over the model axis "
           "(FTL sharding-constraint family):")
     if args.f % 16 == 0:
-        out = ftl.plan_mlp(m=args.m, d_model=args.d, d_ff=args.f // 16,
-                           gated=args.gated, vmem_budget=96 * MB)
-        print(f"  decision={'FUSE' if out.use_fused else 'split'}; "
-              f"{out.comparison.summary() if out.comparison else ''}")
+        gs = graph.mlp_graph(m=args.m, d_model=args.d, d_ff=args.f // 16,
+                             gated=args.gated)
+        chain, fused, unf = _mlp_row(gs, hw.TPU_V5E)
+        print(f"  decision={chain.schedule}; "
+              f"{chain.traffic_bytes / MB:.1f} MiB vs "
+              f"{unf.traffic_bytes / MB:.1f} MiB unfused")
     else:
         print("  d_ff not divisible by 16 — planner keeps it whole")
 
     # the graph partitioner's own view of the same chain (DP over cuts)
-    g = graph.mlp_graph(m=args.m, d_model=args.d, d_ff=args.f,
-                        gated=args.gated)
-    chain = partition.plan_chain(g, vmem_budget=96 * MB)
-    print("\ngraph partitioner (96 MiB):")
+    chain = partition.plan_chain(g, target=hw.TPU_V5E)
+    print("\ngraph partitioner (tpu_v5e):")
     print(chain.summary())
 
     if args.arch:
         from repro import configs
         cfg = configs.get_config(args.arch)
-        bp = registry.plan_block(cfg, m=args.m)
-        print(f"\nwhole-block plan for {args.arch}:")
+        bp = registry.plan_block(cfg, m=args.m, target=base)
+        print(f"\nwhole-block plan for {args.arch} on {base.name}:")
         print(bp.summary())
 
 

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ftl
+from repro.core import ftl, hw
 from repro.kernels import ref
 from repro.kernels.gemm_gelu import gemm_act
 
@@ -22,11 +22,13 @@ MB = 1 << 20
 def main() -> None:
     # --- the paper's benchmark op: H = GeLU(X @ W1) ----------------------
     m, k, n = 3072, 768, 3072
-    print(f"ViT-MLP GEMM+GeLU: X({m}x{k}) @ W1({k}x{n})\n")
+    target = hw.TPU_V5E
+    print(f"ViT-MLP GEMM+GeLU: X({m}x{k}) @ W1({k}x{n}) "
+          f"on {target.describe()}\n")
 
     fused = ftl.solve(ftl.fusion.gemm_act(m=m, k=k, n=n, fuse=True),
-                      vmem_budget=96 * MB)
-    unfused = [ftl.solve(g, vmem_budget=96 * MB)
+                      target=target)
+    unfused = [ftl.solve(g, target=target)
                for g in ftl.fusion.gemm_act(m=m, k=k, n=n, fuse=False)]
 
     print(fused.summary())

@@ -1,4 +1,6 @@
-"""Core: the paper's primary contribution (Fused-Tiled Layers)."""
+"""Core: the paper's primary contribution (Fused-Tiled Layers) and the
+memory-hierarchy targets every planner prices against."""
+from . import hw  # noqa: F401  (import order: hw has no ftl dependency)
 from . import ftl
 
-__all__ = ["ftl"]
+__all__ = ["ftl", "hw"]

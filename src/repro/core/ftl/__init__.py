@@ -1,16 +1,20 @@
 """Fused-Tiled Layers (FTL) — the paper's contribution as a JAX library.
 
 Pipeline (paper Fig. 1, extended to whole-model planning):
-  step 1  ir.py          dim variables per tensor dimension
-  step 2  constraints.py geometric / kernel-policy / performance constraints
-  step 3  graph.py       capture a whole block (or any layer chain) as an
-                         op chain — fusion.py keeps the hand-built chains
-  step 4  partition.py   fusion-partition optimizer: enumerate contiguous
-                         cuts, price each segment with the solver, DP over
-                         cut points for the traffic-minimal schedule
-  step 5  solver.py      branch-and-bound tile solver per fusion group
-  step 6  registry.py    executor registry: planned groups → Pallas
-                         kernels when shapes qualify, XLA scan fallback
+  step 0  core/hw.py      the machine: a Target (ordered fast→backing
+                          MemoryLevels + peak FLOPs) every planner prices
+                          against — presets tpu_v5e / cpu_cache /
+                          rv32_l1_l2
+  step 1  ir.py           dim variables per tensor dimension
+  step 2  constraints.py  geometric / kernel-policy / performance constraints
+  step 3  graph.py        capture a whole block (or any layer chain) as an
+                          op chain — fusion.py keeps the hand-built chains
+  step 4  partition.py    fusion-partition optimizer: enumerate contiguous
+                          cuts, price each segment with the solver, DP over
+                          cut points for the transfer-time-minimal schedule
+  step 5  solver.py       branch-and-bound tile solver per fusion group
+  step 6  registry.py     executor registry: planned groups → Pallas
+                          kernels when shapes qualify, XLA scan fallback
 
 Artifacts: plan.TilePlan (tiles + grid + cost report) per fusion group and
 partition.ChainPlan / registry.BlockPlan per chain, consumed by
@@ -18,12 +22,22 @@ partition.ChainPlan / registry.BlockPlan per chain, consumed by
   * executor_xla.py      — portable lax.scan tiling executors
   * registry.plan_block  — the one entry point models/launch/benchmarks use
 
-auto.plan_mlp / auto.plan_attention remain as thin cached wrappers over
-the graph → partition path.
+``plan_mlp`` / ``plan_attention`` / ``MLPPlanOutcome`` are deprecation
+shims for the retired ``auto`` module (PR 1 noted ``partition.py``
+subsumes its 3-way MLP choice) — new code should use
+``partition.plan_chain`` / ``partition.plan_fixed`` directly.
 """
-from . import (auto, constraints, cost, executor_block, executor_xla,
+from __future__ import annotations
+
+import dataclasses as _dataclasses
+import functools as _functools
+import warnings as _warnings
+from typing import Mapping as _Mapping
+
+from repro.core.hw import MemoryLevel, Target, default_target, get_target
+
+from . import (constraints, cost, executor_block, executor_xla,
                fusion, graph, ir, partition, plan, registry, solver)
-from .auto import MLPPlanOutcome, plan_attention, plan_mlp
 from .constraints import build_dim_constraints
 from .cost import CostReport, evaluate
 from .fusion import attention, gemm_act, gemm_chain, mlp
@@ -34,11 +48,12 @@ from .partition import ChainPlan, Segment, all_cuts, plan_chain, plan_fixed
 from .plan import FusionComparison, TilePlan, compare
 from .registry import BlockPlan, ExecContext, Executor, mlp_executor, \
     plan_block, run_block
-from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError, solve
+from .solver import InfeasibleError, solve
 
 __all__ = [
     "Dim", "FusionGroup", "KernelPolicy", "OpNode", "Role", "TensorSpec",
     "CostReport", "TilePlan", "FusionComparison",
+    "MemoryLevel", "Target", "default_target", "get_target",
     "attention", "gemm_act", "gemm_chain", "mlp",
     "OpGraph", "attention_graph", "block_graph", "gemm_act_graph",
     "gemm_chain_graph", "mlp_graph",
@@ -46,8 +61,125 @@ __all__ = [
     "BlockPlan", "ExecContext", "Executor", "mlp_executor", "plan_block",
     "run_block",
     "build_dim_constraints", "evaluate", "solve", "compare",
-    "DEFAULT_VMEM_BUDGET", "InfeasibleError",
+    "InfeasibleError",
     "MLPPlanOutcome", "plan_attention", "plan_mlp",
-    "auto", "constraints", "cost", "executor_block", "executor_xla",
+    "constraints", "cost", "executor_block", "executor_xla",
     "fusion", "graph", "ir", "partition", "plan", "registry", "solver",
 ]
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims for the retired core/ftl/auto.py (kept one release)
+# ---------------------------------------------------------------------------
+
+@_dataclasses.dataclass(frozen=True)
+class MLPPlanOutcome:
+    """Deprecated: the retired auto-planner's result record.
+
+    ``partition.plan_chain`` is the decision authority; this shim prices
+    the three canonical MLP schedules via ``partition.plan_fixed`` for
+    callers that still report them side by side.
+    """
+
+    fused: TilePlan | None
+    unfused: tuple[TilePlan, ...]
+    comparison: FusionComparison | None
+    use_fused: bool
+    partial: tuple[TilePlan, ...] = ()
+    schedule: str = ""               # 'fused' | 'partial' | 'unfused'
+    chain: ChainPlan | None = None   # the partitioner's chosen schedule
+
+    @property
+    def chosen_traffic(self) -> int:
+        if self.chain is not None:
+            return self.chain.traffic_bytes
+        if self.schedule == "fused" or (not self.schedule and self.use_fused):
+            return self.fused.traffic_bytes
+        if self.schedule == "partial":
+            return sum(p.traffic_bytes for p in self.partial)
+        return sum(p.traffic_bytes for p in self.unfused)
+
+
+def _deprecated(name: str) -> None:
+    _warnings.warn(
+        f"repro.core.ftl.{name} is deprecated (auto.py retired); use "
+        f"partition.plan_chain / partition.plan_fixed with a hw.Target",
+        DeprecationWarning, stacklevel=3)
+
+
+def _freeze(d: _Mapping[str, int] | None):
+    return tuple(sorted(d.items())) if d else None
+
+
+@_functools.lru_cache(maxsize=512)
+def _plan_mlp_cached(
+    m: int, d_model: int, d_ff: int, dtype: str, gated: bool, act: str,
+    target: Target, sharded: tuple | None,
+) -> MLPPlanOutcome:
+    sharded_sizes = dict(sharded) if sharded else None
+    g = graph.mlp_graph(m=m, d_model=d_model, d_ff=d_ff, dtype=dtype,
+                        gated=gated, act=act)
+    kw = dict(target=target, sharded_sizes=sharded_sizes)
+    # the partitioner's decision over every contiguous cut of the chain
+    chain = partition.plan_chain(g, **kw)
+    # canonical three schedules, still priced for comparison/reporting
+    unfused = tuple(
+        s.plan for s in partition.plan_fixed(g, partition.all_cuts(g),
+                                             **kw).segments
+    )
+    try:
+        partial = tuple(
+            s.plan
+            for s in partition.plan_fixed(g, (g.n_ops - 1,), **kw).segments
+        )
+    except InfeasibleError:
+        partial = ()
+    try:
+        fused = partition.plan_fixed(g, (), **kw).segments[0].plan
+    except InfeasibleError:
+        fused = None
+    cmp = compare(fused, unfused) if fused is not None else None
+    return MLPPlanOutcome(fused, unfused, cmp,
+                          use_fused=chain.schedule == "fused",
+                          partial=partial, schedule=chain.schedule,
+                          chain=chain)
+
+
+def plan_mlp(
+    *,
+    m: int,
+    d_model: int,
+    d_ff: int,
+    dtype: str = "bfloat16",
+    gated: bool = False,
+    act: str = "gelu",
+    target: Target | None = None,
+    sharded_sizes: _Mapping[str, int] | None = None,
+) -> MLPPlanOutcome:
+    """Deprecated shim: plan an MLP, pricing the canonical schedules."""
+    _deprecated("plan_mlp")
+    target = target if target is not None else default_target()
+    return _plan_mlp_cached(m, d_model, d_ff, dtype, gated, act, target,
+                            _freeze(sharded_sizes))
+
+
+@_functools.lru_cache(maxsize=512)
+def _plan_attention_cached(q_len: int, kv_len: int, head_dim: int,
+                           dtype: str, target: Target) -> TilePlan:
+    g = graph.attention_graph(q_len=q_len, kv_len=kv_len, head_dim=head_dim,
+                              dtype=dtype)
+    return partition.plan_fixed(g, (), target=target).segments[0].plan
+
+
+def plan_attention(
+    *,
+    q_len: int,
+    kv_len: int,
+    head_dim: int,
+    dtype: str = "bfloat16",
+    target: Target | None = None,
+) -> TilePlan:
+    """Deprecated shim: the fused attention plan for one head."""
+    _deprecated("plan_attention")
+    target = target if target is not None else default_target()
+    return _plan_attention_cached(q_len, kv_len, head_dim, dtype, target)

@@ -1,8 +1,19 @@
-"""FTL traffic / memory cost model.
+"""FTL traffic / memory / transfer-time cost model.
 
-Models exactly what the paper's Fig. 3 measures on Siracusa: total bytes
-moved between the software-managed fast memory (VMEM here, L1 there) and
-the backing store (HBM here, L2/L3 there), plus the DMA-transfer count.
+Models what the paper's Fig. 3 measures on Siracusa: total bytes moved
+between the software-managed fast memory (VMEM here, L1 there) and the
+backing tiers (HBM here, L2/L3 there), the DMA-transfer count, and —
+since the machine is now a first-class :class:`repro.core.hw.Target` —
+the modeled *transfer time* those moves cost, which is the solver's
+objective:
+
+    time = Σ_level  bytes(level) / bw(level)  +  transfers(level) · dma_setup(level)
+
+Each streamed tensor is assigned a *home* backing level by the target
+(smallest-first first-fit over level capacities — ``Target.assign_homes``),
+so a large intermediate spills past a full L2 to L3 exactly like the
+paper's overflow regime, and its traffic is priced at the deep level's
+bandwidth.
 
 Traffic model
 -------------
@@ -20,9 +31,10 @@ unchanged).  Hence::
 Contraction grid dims are forced innermost so outputs accumulate in VMEM and
 are written exactly once (kernel-policy: ``contract_accumulate``).
 
-Intermediates of a fused group contribute **zero** HBM traffic — that is the
-paper's entire point — but do occupy VMEM (single-buffered: they are
-produced and consumed in-core).  Streamed HBM tensors are double-buffered.
+Intermediates of a fused group contribute **zero** backing-store traffic —
+that is the paper's entire point — but do occupy fast memory
+(single-buffered: they are produced and consumed in-core).  Streamed
+tensors are double-buffered.
 """
 from __future__ import annotations
 
@@ -30,18 +42,25 @@ import dataclasses
 import itertools
 from typing import Mapping, Sequence
 
+from repro.core import hw as hwlib
+
 from .constraints import DimConstraint, accumulator_tensors
 from .ir import FusionGroup, Role, TensorSpec
 
 
 @dataclasses.dataclass(frozen=True)
 class CostReport:
-    traffic_bytes: int           # HBM<->VMEM total
+    traffic_bytes: int           # fast<->backing total
     dma_transfers: int           # number of block copies
-    vmem_bytes: int              # peak VMEM footprint (with double buffering)
+    vmem_bytes: int              # peak fast-memory footprint (double-buffered)
     grid: tuple[tuple[str, int], ...]   # (dim, n_tiles) outer->inner
     per_tensor_traffic: dict[str, int]
     macs: int
+    transfer_time_s: float = 0.0        # the solver's objective
+    per_level_traffic: dict[str, int] = dataclasses.field(
+        default_factory=dict)           # level name -> bytes
+    per_level_transfers: dict[str, int] = dataclasses.field(
+        default_factory=dict)           # level name -> DMA count
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -95,26 +114,43 @@ def evaluate(
     tiles: Mapping[str, int],
     cons: Mapping[str, DimConstraint],
     *,
+    target: hwlib.Target | None = None,
     order: Sequence[str] | None = None,
     double_buffer: bool = True,
 ) -> CostReport:
-    """Cost of an assignment; if ``order`` is None the best grid order is
-    chosen by enumeration over the tiled dims (contract dims pinned inner).
+    """Cost of an assignment on ``target`` (None → the default target).
+
+    If ``order`` is None the best grid order is chosen by enumeration
+    over the tiled dims (contract dims pinned inner), minimizing modeled
+    transfer time with (traffic, DMA count) as the tie-break.
     """
+    target = target if target is not None else hwlib.default_target()
     counts = {d: n_tiles(cons[d].size, tiles[d]) for d in tiles}
     tiled = [d for d, c in counts.items() if c > 1]
     contract = [d for d in tiled if cons[d].is_contract]
     free = [d for d in tiled if not cons[d].is_contract]
 
     hbm = group.hbm_tensors()
+    full_sizes = {d: cons[d].size for d in cons}
+    footprints = {t.name: t.bytes_full(full_sizes) for t in hbm}
+    homes = target.assign_homes(footprints)
+    # fixed per-tensor weights: home levels depend only on full tensor
+    # sizes, so the modeled time stays monotone in tile sizes and the
+    # solver's optimistic full-size prune remains a valid lower bound.
+    w_bytes = {n: 1.0 / homes[n].bw_bytes_per_s for n in homes}
+    w_dma = {n: homes[n].dma_setup_s for n in homes}
 
-    def traffic_for(ordr: Sequence[str]) -> tuple[int, int, dict[str, int]]:
+    def traffic_for(
+        ordr: Sequence[str],
+    ) -> tuple[float, int, int, dict[str, int], dict[str, int]]:
         per = {}
+        fetches_per = {}
         tot = 0
         dma = 0
+        time_s = 0.0
         for t in hbm:
             if t.role is Role.OUTPUT:
-                # accumulated in VMEM; written once per output block
+                # accumulated in fast memory; written once per output block
                 rev = 1
                 fetches = 1
                 for d in t.dims:
@@ -124,11 +160,13 @@ def evaluate(
                 fetches = rev
                 for d in t.dims:
                     fetches *= counts.get(d, 1)
-            b = t.bytes_full({d: cons[d].size for d in t.dims}) * rev
+            b = footprints[t.name] * rev
             per[t.name] = b
+            fetches_per[t.name] = fetches
             tot += b
             dma += fetches
-        return tot, dma, per
+            time_s += b * w_bytes[t.name] + fetches * w_dma[t.name]
+        return time_s, tot, dma, per, fetches_per
 
     if order is None:
         best = None
@@ -136,14 +174,21 @@ def evaluate(
         for perm in itertools.permutations(free) if free else [()]:
             for cperm in itertools.permutations(contract) if contract else [()]:
                 ordr = list(perm) + list(cperm)
-                tot, dma, per = traffic_for(ordr)
-                key = (tot, dma)
+                time_s, tot, dma, per, fper = traffic_for(ordr)
+                key = (time_s, tot, dma)
                 if best is None or key < best[0]:
-                    best = (key, ordr, per)
-        (tot, dma), ordr, per = best
+                    best = (key, ordr, per, fper)
+        (time_s, tot, dma), ordr, per, fper = best
     else:
         ordr = list(order)
-        tot, dma, per = traffic_for(ordr)
+        time_s, tot, dma, per, fper = traffic_for(ordr)
+
+    lvl_bytes: dict[str, int] = {}
+    lvl_dma: dict[str, int] = {}
+    for n, b in per.items():
+        lname = homes[n].name
+        lvl_bytes[lname] = lvl_bytes.get(lname, 0) + b
+        lvl_dma[lname] = lvl_dma.get(lname, 0) + fper[n]
 
     return CostReport(
         traffic_bytes=tot,
@@ -152,10 +197,16 @@ def evaluate(
         grid=tuple((d, counts[d]) for d in ordr),
         per_tensor_traffic=per,
         macs=group.total_macs(),
+        # Target.transfer_time is the canonical objective formula; the
+        # per-tensor weights inside traffic_for are its factored-out form
+        # used only to rank grid orders cheaply.
+        transfer_time_s=target.transfer_time(lvl_bytes, lvl_dma),
+        per_level_traffic=lvl_bytes,
+        per_level_transfers=lvl_dma,
     )
 
 
 def min_traffic_bound(group: FusionGroup, cons: Mapping[str, DimConstraint]) -> int:
-    """Optimistic lower bound: every HBM tensor moved exactly once."""
+    """Optimistic lower bound: every streamed tensor moved exactly once."""
     sizes = {d: c.size for d, c in cons.items()}
     return sum(t.bytes_full(sizes) for t in group.hbm_tensors())

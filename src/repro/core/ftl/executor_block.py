@@ -23,6 +23,8 @@ the planning half of ``repro.core.ftl`` stays importable on its own.
 
 from __future__ import annotations
 
+import dataclasses
+import functools
 from typing import Any
 
 import jax.numpy as jnp
@@ -48,6 +50,7 @@ def _runtime_ctx(
         dtype=dtype,
         gated=cfg.mlp_gated,
         act=cfg.mlp_act,
+        target=plan.target,
     )
 
 
@@ -88,11 +91,22 @@ def _stage_executor(
     return registry.find(kind, ctx)
 
 
+def _bind_target(ex: registry.Executor, target) -> registry.Executor:
+    """Pin the executor to the plan's own target: every run function (the
+    Pallas kernels' block-size planning, the scan executors' token-tile
+    choice) must price itself against the machine the plan was made for,
+    not whatever the process default happens to be at run time."""
+    return dataclasses.replace(
+        ex,
+        run=functools.partial(ex.run, target=target),
+    )
+
+
 def _resolve_gemm(plan, mode, m, dtype) -> registry.Executor:
     if mode == "off":
-        return registry.get("xla_gemm")
+        return _bind_target(registry.get("xla_gemm"), plan.target)
     ctx = _runtime_ctx(plan, "gemm", plan.schedule, m, dtype)
-    return _stage_executor(plan, "gemm", ctx)
+    return _bind_target(_stage_executor(plan, "gemm", ctx), plan.target)
 
 
 def _resolve_attention(plan, mode, m, dtype) -> registry.Executor:
@@ -101,7 +115,7 @@ def _resolve_attention(plan, mode, m, dtype) -> registry.Executor:
         # the jnp oracle elsewhere — exactly what a 'fused' qualification
         # resolves to
         ctx = _runtime_ctx(plan, "attention", "fused", m, dtype)
-        return registry.find("attention", ctx)
+        return _bind_target(registry.find("attention", ctx), plan.target)
     ctx = _runtime_ctx(
         plan,
         "attention",
@@ -109,7 +123,7 @@ def _resolve_attention(plan, mode, m, dtype) -> registry.Executor:
         m,
         dtype,
     )
-    return _stage_executor(plan, "attention", ctx)
+    return _bind_target(_stage_executor(plan, "attention", ctx), plan.target)
 
 
 def _resolve_mlp(
@@ -140,9 +154,10 @@ def _resolve_mlp(
             dtype=dtype,
             gated=gated,
             act=cfg.mlp_act,
+            target=plan.target,
         )
     ctx = _runtime_ctx(plan, "mlp", _sub_schedule(plan, "mlp"), m, dtype)
-    return _stage_executor(plan, "mlp", ctx)
+    return _bind_target(_stage_executor(plan, "mlp", ctx), plan.target)
 
 
 def resolved_executors(

@@ -4,9 +4,9 @@ The paper fuses one manually chosen pair of layers; the seed generalized
 that to a three-way MLP choice (fused / partial / unfused).  This module
 subsumes both: given an :class:`~repro.core.ftl.graph.OpGraph`, it
 enumerates every *contiguous partition* of the chain (LoopTree-style), has
-the branch-and-bound tile solver price each candidate segment, and runs a
-dynamic program over cut points to pick the globally traffic-minimal
-schedule.
+the branch-and-bound tile solver price each candidate segment on the
+planning :class:`~repro.core.hw.Target`, and runs a dynamic program over
+cut points to pick the globally transfer-time-minimal schedule.
 
 For an ``n``-op chain there are ``2^(n-1)`` partitions but only
 ``n·(n+1)/2`` distinct segments, so the DP solves each segment once and
@@ -15,9 +15,10 @@ composes:
     best[i] = min over j < i of  best[j] + cost(segment ops[j:i])
 
 Segments that violate a barrier (head-split reshape, repeat change) or
-whose tiling problem is infeasible at the VMEM budget are skipped.  The
-cost of a segment is its solved HBM traffic times its multiplicity
-(per-head segments run once per head).
+whose tiling problem is infeasible on the target are skipped.  The cost
+of a segment is its solved modeled transfer time (per-level bytes/bw +
+transfers·dma_setup) times its multiplicity (per-head segments run once
+per head), with (traffic, DMA count, segment count) as the tie-break.
 
 ``plan_fixed`` prices one specific partition — the hook the benchmarks
 use to reproduce the paper's fused-vs-unfused table regardless of which
@@ -29,9 +30,11 @@ import dataclasses
 import functools
 from typing import Iterable, Mapping
 
+from repro.core import hw as hwlib
+
 from .graph import OpGraph
 from .plan import TilePlan
-from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError, solve
+from .solver import InfeasibleError, solve
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +58,15 @@ class Segment:
     def vmem_bytes(self) -> int:
         return self.plan.vmem_bytes
 
+    @property
+    def transfer_time_s(self) -> float:
+        return self.plan.transfer_time_s * self.repeat
+
+    @property
+    def per_level_traffic(self) -> dict[str, int]:
+        return {name: b * self.repeat
+                for name, b in self.plan.per_level_traffic.items()}
+
     def op_names(self) -> tuple[str, ...]:
         return tuple(op.name for op in self.plan.group.ops)
 
@@ -65,7 +77,11 @@ class ChainPlan:
 
     graph: OpGraph
     segments: tuple[Segment, ...]
-    vmem_budget: int
+    target: hwlib.Target
+
+    @property
+    def vmem_budget(self) -> int:
+        return self.target.fast_capacity
 
     @property
     def traffic_bytes(self) -> int:
@@ -76,8 +92,21 @@ class ChainPlan:
         return sum(s.dma_transfers for s in self.segments)
 
     @property
+    def transfer_time_s(self) -> float:
+        return sum(s.transfer_time_s for s in self.segments)
+
+    @property
+    def per_level_traffic(self) -> dict[str, int]:
+        """Modeled traffic per backing level, summed over segments."""
+        out: dict[str, int] = {}
+        for s in self.segments:
+            for name, b in s.per_level_traffic.items():
+                out[name] = out.get(name, 0) + b
+        return out
+
+    @property
     def vmem_bytes(self) -> int:
-        """Peak VMEM: segments execute sequentially."""
+        """Peak fast-memory use: segments execute sequentially."""
         return max(s.vmem_bytes for s in self.segments)
 
     def cuts(self) -> tuple[int, ...]:
@@ -100,13 +129,21 @@ class ChainPlan:
 
     def summary(self) -> str:
         MB = 1 << 20
+        per_level = ", ".join(
+            f"{name}={b / MB:.2f} MiB"
+            for name, b in self.per_level_traffic.items()
+        )
         lines = [
-            f"FTL chain plan '{self.graph.name}': {self.schedule} "
+            f"FTL chain plan '{self.graph.name}' on target "
+            f"'{self.target.name}': {self.schedule} "
             f"({len(self.segments)} segment(s), cuts at {self.cuts()})",
             f"  traffic : {self.traffic_bytes / MB:.2f} MiB over "
-            f"{self.dma_transfers} DMA transfers",
-            f"  VMEM    : {self.vmem_bytes / MB:.2f} MiB peak / "
-            f"{self.vmem_budget / MB:.0f} MiB budget",
+            f"{self.dma_transfers} DMA transfers ({per_level})",
+            f"  time    : {1e3 * self.transfer_time_s:.3f} ms modeled "
+            f"transfer",
+            f"  {self.target.fast.name:7s} : "
+            f"{self.vmem_bytes / MB:.2f} MiB peak / "
+            f"{self.vmem_budget / MB:.2f} MiB budget",
         ]
         for s in self.segments:
             rep = f" x{s.repeat}" if s.repeat > 1 else ""
@@ -125,14 +162,14 @@ def _solve_segment(
     graph: OpGraph,
     lo: int,
     hi: int,
-    vmem_budget: int,
+    target: hwlib.Target,
     sharded: tuple | None,
 ) -> Segment | None:
-    """Price one segment; None when infeasible at the budget."""
+    """Price one segment; None when infeasible on the target."""
     try:
         plan = solve(
             graph.group(lo, hi),
-            vmem_budget=vmem_budget,
+            target=target,
             sharded_sizes=dict(sharded) if sharded else None,
         )
     except InfeasibleError:
@@ -142,7 +179,7 @@ def _solve_segment(
 
 @functools.lru_cache(maxsize=256)
 def _plan_chain_cached(
-    graph: OpGraph, vmem_budget: int, sharded: tuple | None
+    graph: OpGraph, target: hwlib.Target, sharded: tuple | None
 ) -> ChainPlan:
     n = graph.n_ops
     seg: dict[tuple[int, int], Segment | None] = {}
@@ -150,46 +187,50 @@ def _plan_chain_cached(
         for hi in range(lo + 1, n + 1):
             if graph.crosses_barrier(lo, hi):
                 continue
-            seg[(lo, hi)] = _solve_segment(graph, lo, hi, vmem_budget,
-                                           sharded)
+            seg[(lo, hi)] = _solve_segment(graph, lo, hi, target, sharded)
 
-    # DP over cut points; key = (traffic, dma, n_segments) for determinism.
-    best: list[tuple[tuple[int, int, int], tuple[Segment, ...]] | None]
+    # DP over cut points; key = (time, traffic, dma, n_segments) so the
+    # objective matches the solver's and ties resolve deterministically.
+    best: list[tuple[tuple, tuple[Segment, ...]] | None]
     best = [None] * (n + 1)
-    best[0] = ((0, 0, 0), ())
+    best[0] = ((0.0, 0, 0, 0), ())
     for hi in range(1, n + 1):
         for lo in range(hi):
             prev = best[lo]
             s = seg.get((lo, hi))
             if prev is None or s is None:
                 continue
-            (pt, pd, pn), psegs = prev
-            key = (pt + s.traffic_bytes, pd + s.dma_transfers, pn + 1)
+            (pt, ptr, pd, pn), psegs = prev
+            key = (pt + s.transfer_time_s, ptr + s.traffic_bytes,
+                   pd + s.dma_transfers, pn + 1)
             if best[hi] is None or key < best[hi][0]:
                 best[hi] = (key, psegs + (s,))
     if best[n] is None:
         raise InfeasibleError(
-            f"graph {graph.name}: no partition fits {vmem_budget} B VMEM"
+            f"graph {graph.name}: no partition fits the "
+            f"{target.fast_capacity} B {target.fast.name} of target "
+            f"{target.name}"
         )
-    return ChainPlan(graph=graph, segments=best[n][1],
-                     vmem_budget=vmem_budget)
+    return ChainPlan(graph=graph, segments=best[n][1], target=target)
 
 
 def plan_chain(
     graph: OpGraph,
     *,
-    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    target: hwlib.Target | None = None,
     sharded_sizes: Mapping[str, int] | None = None,
 ) -> ChainPlan:
-    """Globally traffic-minimal fusion partition of ``graph``."""
-    return _plan_chain_cached(graph, vmem_budget, _freeze(sharded_sizes))
+    """Globally transfer-time-minimal fusion partition of ``graph`` on
+    ``target`` (None → the default target)."""
+    target = target if target is not None else hwlib.default_target()
+    return _plan_chain_cached(graph, target, _freeze(sharded_sizes))
 
 
 def plan_fixed(
     graph: OpGraph,
     cuts: Iterable[int],
     *,
-    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    target: hwlib.Target | None = None,
     sharded_sizes: Mapping[str, int] | None = None,
 ) -> ChainPlan:
     """Price one specific partition given by ``cuts`` (positions 1..n-1).
@@ -197,6 +238,7 @@ def plan_fixed(
     Mandatory barriers are added automatically.  Raises
     :class:`InfeasibleError` if any segment has no feasible tiling.
     """
+    target = target if target is not None else hwlib.default_target()
     n = graph.n_ops
     cut_set = set(cuts) | set(graph.barriers)
     if any(c < 1 or c >= n for c in cut_set):
@@ -205,15 +247,15 @@ def plan_fixed(
     sharded = _freeze(sharded_sizes)
     segments = []
     for lo, hi in zip(bounds, bounds[1:]):
-        s = _solve_segment(graph, lo, hi, vmem_budget, sharded)
+        s = _solve_segment(graph, lo, hi, target, sharded)
         if s is None:
             raise InfeasibleError(
                 f"graph {graph.name}: segment [{lo}, {hi}) does not fit "
-                f"{vmem_budget} B VMEM"
+                f"the {target.fast_capacity} B {target.fast.name} of "
+                f"target {target.name}"
             )
         segments.append(s)
-    return ChainPlan(graph=graph, segments=tuple(segments),
-                     vmem_budget=vmem_budget)
+    return ChainPlan(graph=graph, segments=tuple(segments), target=target)
 
 
 def all_cuts(graph: OpGraph) -> tuple[int, ...]:

@@ -14,6 +14,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from repro.core import hw as hwlib
+
 from .constraints import DimConstraint
 from .cost import CostReport
 from .ir import FusionGroup
@@ -25,8 +27,13 @@ class TilePlan:
     tiles: dict[str, int]
     constraints: dict[str, DimConstraint]
     report: CostReport
-    vmem_budget: int
+    target: hwlib.Target
     nodes_explored: int = 0
+
+    @property
+    def vmem_budget(self) -> int:
+        """Fast-level capacity of the planning target (back-compat name)."""
+        return self.target.fast_capacity
 
     # ------------------------------------------------------------------
     # accessors used by the kernels
@@ -63,6 +70,14 @@ class TilePlan:
     def vmem_bytes(self) -> int:
         return self.report.vmem_bytes
 
+    @property
+    def transfer_time_s(self) -> float:
+        return self.report.transfer_time_s
+
+    @property
+    def per_level_traffic(self) -> dict[str, int]:
+        return self.report.per_level_traffic
+
     def intermediate_bytes_avoided(self) -> int:
         """HBM bytes the fusion avoids: every intermediate is written once
         and read once in the layer-per-layer schedule (at minimum)."""
@@ -72,18 +87,25 @@ class TilePlan:
         )
 
     def summary(self) -> str:
+        per_level = ", ".join(
+            f"{name}={b / 2**20:.2f} MiB"
+            for name, b in self.report.per_level_traffic.items()
+        )
         lines = [
-            f"FTL plan '{self.group.name}':",
+            f"FTL plan '{self.group.name}' on target '{self.target.name}':",
             f"  tiles   : "
             + ", ".join(f"{d}={self.tiles[d]}/{self.constraints[d].size}"
                         for d in sorted(self.tiles)),
             f"  grid    : "
             + " > ".join(f"{d}x{c}" for d, c in self.report.grid)
             + (" (single block)" if not self.report.grid else ""),
-            f"  VMEM    : {self.vmem_bytes/2**20:.2f} MiB / "
-            f"{self.vmem_budget/2**20:.0f} MiB budget",
+            f"  {self.target.fast.name:7s} : "
+            f"{self.vmem_bytes/2**20:.2f} MiB / "
+            f"{self.vmem_budget/2**20:.2f} MiB budget",
             f"  traffic : {self.traffic_bytes/2**20:.2f} MiB over "
-            f"{self.dma_transfers} DMA transfers",
+            f"{self.dma_transfers} DMA transfers ({per_level})",
+            f"  time    : {1e3 * self.transfer_time_s:.3f} ms modeled "
+            f"transfer",
             f"  AI      : {self.report.arithmetic_intensity:.1f} FLOP/B",
         ]
         return "\n".join(lines)

@@ -29,9 +29,11 @@ from typing import Callable, Mapping
 import jax
 import jax.numpy as jnp
 
+from repro.core import hw as hwlib
+
 from . import executor_xla, graph, partition
 from .partition import ChainPlan
-from .solver import DEFAULT_VMEM_BUDGET, InfeasibleError, solve
+from .solver import InfeasibleError, solve
 
 
 # ---------------------------------------------------------------------------
@@ -51,6 +53,15 @@ class ExecContext:
     dtype: str = "bfloat16"
     gated: bool = False
     act: str = "gelu"
+    target: hwlib.Target | None = None   # the plan's memory hierarchy
+
+
+def _vmem_class(target: hwlib.Target | None) -> bool:
+    """True when the target's fast level can host the Pallas kernels'
+    double-buffered pipelines (a TPU-VMEM-class scratchpad).  A plan made
+    for a KiB-scale scratchpad (rv32_l1_l2) must not bind them even on a
+    TPU host — its tile choices assume a different machine."""
+    return target is None or target.fast.capacity_bytes >= 4 * (1 << 20)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,14 +128,13 @@ def platform() -> str:
 # built-in MLP executors
 # ---------------------------------------------------------------------------
 
-def _run_pallas_fused_mlp(x, w1, w2, wg, b1, b2, *, act,
-                          vmem_budget=DEFAULT_VMEM_BUDGET):
+def _run_pallas_fused_mlp(x, w1, w2, wg, b1, b2, *, act, target=None):
     from repro.kernels import ops  # lazy: Pallas stack
-    return ops.fused_mlp(x, w1, w2, wg, b1, b2, act=act, backend="pallas")
+    return ops.fused_mlp(x, w1, w2, wg, b1, b2, act=act, backend="pallas",
+                         target=target)
 
 
-def _run_pallas_partial_mlp(x, w1, w2, wg, b1, b2, *, act,
-                            vmem_budget=DEFAULT_VMEM_BUDGET):
+def _run_pallas_partial_mlp(x, w1, w2, wg, b1, b2, *, act, target=None):
     """Partial schedule on the Pallas kernels: the paper's fused
     GEMM+activation kernel for the up projection, a plain GEMM kernel for
     the down projection (non-gated only — the gated epilogue has no
@@ -132,8 +142,8 @@ def _run_pallas_partial_mlp(x, w1, w2, wg, b1, b2, *, act,
     from repro.kernels import ops
     *lead, m, k = x.shape
     xf = x.reshape(-1, k)
-    h = ops.gemm_act(xf, w1, b1, act=act, backend="pallas")
-    y = ops.gemm(h, w2, backend="pallas")
+    h = ops.gemm_act(xf, w1, b1, act=act, backend="pallas", target=target)
+    y = ops.gemm(h, w2, backend="pallas", target=target)
     if b2 is not None:
         y = y + b2
     return y.reshape(*lead, m, w2.shape[1])
@@ -141,16 +151,17 @@ def _run_pallas_partial_mlp(x, w1, w2, wg, b1, b2, *, act,
 
 @functools.lru_cache(maxsize=512)
 def _scan_tile(m: int, d_model: int, d_ff: int, dtype: str, gated: bool,
-               act: str, vmem_budget: int) -> int:
+               act: str, target: hwlib.Target) -> int:
     """Token-tile for the scan executor from its own kernel policy: the
     scan tiles M only, so K/F/N stay whole and the solver picks the
-    largest M tile that fits the budget.  Falls back to a power-of-two
-    divisor when even the smallest tile does not fit (XLA will still run —
-    the budget is a planning target, not a hard limit on this backend)."""
+    largest M tile that fits the target's fast level.  Falls back to a
+    power-of-two divisor when even the smallest tile does not fit (XLA
+    will still run — the budget is a planning target, not a hard limit on
+    this backend)."""
     g = graph.mlp_graph(m=m, d_model=d_model, d_ff=d_ff, dtype=dtype,
                         gated=gated, act=act)
     try:
-        plan = solve(g.group(0, g.n_ops), vmem_budget=vmem_budget,
+        plan = solve(g.group(0, g.n_ops), target=target,
                      whole_dims=frozenset({"K", "F", "N"}))
         return plan.tile("M")
     except InfeasibleError:
@@ -160,25 +171,26 @@ def _scan_tile(m: int, d_model: int, d_ff: int, dtype: str, gated: bool,
         return m
 
 
-def _run_xla_scan_mlp(x, w1, w2, wg, b1, b2, *, act,
-                      vmem_budget=DEFAULT_VMEM_BUDGET):
+def _run_xla_scan_mlp(x, w1, w2, wg, b1, b2, *, act, target=None):
     m = x.shape[-2]
     tile = _scan_tile(m, w1.shape[0], w1.shape[1], str(x.dtype),
-                      wg is not None, act, vmem_budget)
+                      wg is not None, act,
+                      target if target is not None
+                      else hwlib.default_target())
     return executor_xla.mlp_scan(x, w1, w2, wg, b1, b2, act=act, tile_m=tile)
 
 
-def _run_xla_partial_mlp(x, w1, w2, wg, b1, b2, *, act,
-                         vmem_budget=DEFAULT_VMEM_BUDGET):
+def _run_xla_partial_mlp(x, w1, w2, wg, b1, b2, *, act, target=None):
     m = x.shape[-2]
     tile = _scan_tile(m, w1.shape[0], w1.shape[1], str(x.dtype),
-                      wg is not None, act, vmem_budget)
+                      wg is not None, act,
+                      target if target is not None
+                      else hwlib.default_target())
     return executor_xla.mlp_partial_scan(x, w1, w2, wg, b1, b2, act=act,
                                          tile_m=tile)
 
 
-def _run_xla_unfused_mlp(x, w1, w2, wg, b1, b2, *, act,
-                         vmem_budget=DEFAULT_VMEM_BUDGET):
+def _run_xla_unfused_mlp(x, w1, w2, wg, b1, b2, *, act, target=None):
     from repro.distributed.act_sharding import constrain  # lazy: no cycle
     from repro.kernels import ref
     h = x @ w1
@@ -194,33 +206,34 @@ def _run_xla_unfused_mlp(x, w1, w2, wg, b1, b2, *, act,
     return y
 
 
-def _run_pallas_attention(q, k, v, **kw):
+def _run_pallas_attention(q, k, v, *, target=None, **kw):
     from repro.kernels import ops
-    return ops.attention(q, k, v, backend="pallas", **kw)
+    return ops.attention(q, k, v, backend="pallas", target=target, **kw)
 
 
-def _run_ref_attention(q, k, v, **kw):
+def _run_ref_attention(q, k, v, *, target=None, **kw):
     from repro.kernels import ops
-    return ops.attention(q, k, v, backend="ref", **kw)
+    return ops.attention(q, k, v, backend="ref", target=target, **kw)
 
 
-def _run_pallas_gemm(x, w):
+def _run_pallas_gemm(x, w, *, target=None):
     from repro.kernels import ops
-    return ops.gemm(x, w, backend="pallas")
+    return ops.gemm(x, w, backend="pallas", target=target)
 
 
-def _run_xla_gemm(x, w):
+def _run_xla_gemm(x, w, *, target=None):
     return x @ w
 
 
 register(Executor(
     name="pallas_fused_mlp", kind="mlp", backend="pallas", priority=100,
-    qualifies=lambda c: c.platform == "tpu" and c.schedule == "fused",
+    qualifies=lambda c: (c.platform == "tpu" and c.schedule == "fused"
+                         and _vmem_class(c.target)),
     run=_run_pallas_fused_mlp))
 register(Executor(
     name="pallas_partial_mlp", kind="mlp", backend="pallas", priority=90,
     qualifies=lambda c: (c.platform == "tpu" and c.schedule == "partial"
-                         and not c.gated),
+                         and not c.gated and _vmem_class(c.target)),
     run=_run_pallas_partial_mlp))
 register(Executor(
     name="xla_scan_mlp", kind="mlp", backend="xla", priority=50,
@@ -237,7 +250,8 @@ register(Executor(
 register(Executor(
     name="pallas_flash_attention", kind="attention", backend="pallas",
     priority=100,
-    qualifies=lambda c: c.platform == "tpu" and c.schedule != "unfused",
+    qualifies=lambda c: (c.platform == "tpu" and c.schedule != "unfused"
+                         and _vmem_class(c.target)),
     run=_run_pallas_attention))
 register(Executor(
     name="xla_ref_attention", kind="attention", backend="xla", priority=10,
@@ -277,9 +291,9 @@ class GroupBinding:
 class BlockPlan:
     """A planned transformer block with per-segment executor bindings.
 
-    Carries the config and planning shape it was made for so
-    :func:`run_block` can execute it (and requalify bindings) without any
-    side-channel state.
+    Carries the config, planning shape and memory-hierarchy target it was
+    made for so :func:`run_block` can execute it (and requalify bindings)
+    without any side-channel state.
     """
 
     chain: ChainPlan
@@ -288,6 +302,10 @@ class BlockPlan:
     cfg: object = None
     m: int = 0
     dtype: str = ""
+
+    @property
+    def target(self) -> hwlib.Target:
+        return self.chain.target
 
     @property
     def graph(self) -> graph.OpGraph:
@@ -300,6 +318,10 @@ class BlockPlan:
     @property
     def traffic_bytes(self) -> int:
         return self.chain.traffic_bytes
+
+    @property
+    def per_level_traffic(self) -> dict[str, int]:
+        return self.chain.per_level_traffic
 
     def _sub_schedule(self, prefix: str) -> str:
         ops = [op.name for op in self.graph.ops
@@ -323,7 +345,9 @@ class BlockPlan:
         return self._sub_schedule("attn.")
 
     def summary(self) -> str:
-        lines = [self.chain.summary(), f"  executors ({self.platform}):"]
+        lines = [self.chain.summary(),
+                 f"  executors ({self.platform}, planned for "
+                 f"{self.target.name}):"]
         for b in self.bindings:
             lines.append(
                 f"    [{b.segment.lo}:{b.segment.hi}] {b.kind:9s} -> "
@@ -337,12 +361,12 @@ def _freeze(d: Mapping[str, int] | None):
 
 
 @functools.lru_cache(maxsize=128)
-def _plan_block_cached(cfg, m: int, dtype: str | None, vmem_budget: int,
-                       sharded: tuple | None, plat: str,
-                       residual: bool) -> BlockPlan:
+def _plan_block_cached(cfg, m: int, dtype: str | None,
+                       target: hwlib.Target, sharded: tuple | None,
+                       plat: str, residual: bool) -> BlockPlan:
     g = graph.block_graph(cfg, m=m, dtype=dtype, residual=residual)
     chain = partition.plan_chain(
-        g, vmem_budget=vmem_budget,
+        g, target=target,
         sharded_sizes=dict(sharded) if sharded else None)
     shell = BlockPlan(chain=chain, bindings=(), platform=plat, cfg=cfg,
                       m=m, dtype=dtype or cfg.dtype)
@@ -358,7 +382,8 @@ def _plan_block_cached(cfg, m: int, dtype: str | None, vmem_budget: int,
             kind=kind, platform=plat, schedule=sched,
             m=m, d_model=cfg.d_model,
             d_ff=cfg.moe_d_ff if cfg.is_moe else cfg.d_ff,
-            dtype=dtype or cfg.dtype, gated=cfg.mlp_gated, act=cfg.mlp_act)
+            dtype=dtype or cfg.dtype, gated=cfg.mlp_gated, act=cfg.mlp_act,
+            target=target)
         bindings.append(GroupBinding(segment=seg, kind=kind,
                                      executor=find(kind, ctx).name))
     return BlockPlan(chain=chain, bindings=tuple(bindings), platform=plat,
@@ -370,13 +395,15 @@ def plan_block(
     *,
     m: int,
     dtype: str | None = None,
-    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    target: hwlib.Target | None = None,
     sharded_sizes: Mapping[str, int] | None = None,
     residual: bool = True,
 ) -> BlockPlan:
-    """Plan one transformer block of ``cfg`` at ``m`` tokens and bind every
-    planned fusion group to the best qualifying executor."""
-    return _plan_block_cached(cfg, m, dtype, vmem_budget,
+    """Plan one transformer block of ``cfg`` at ``m`` tokens on ``target``
+    (None → the default target) and bind every planned fusion group to the
+    best qualifying executor."""
+    target = target if target is not None else hwlib.default_target()
+    return _plan_block_cached(cfg, m, dtype, target,
                               _freeze(sharded_sizes), platform(), residual)
 
 
@@ -387,7 +414,7 @@ def plan_block(
 @functools.lru_cache(maxsize=1024)
 def _mlp_executor_cached(mode: str, m: int, d_model: int, d_ff: int,
                          dtype: str, gated: bool, act: str,
-                         vmem_budget: int, plat: str) -> Executor:
+                         target: hwlib.Target, plat: str) -> Executor:
     if mode == "off":
         ex = get("xla_unfused_mlp")
     elif mode == "fused":
@@ -399,22 +426,20 @@ def _mlp_executor_cached(mode: str, m: int, d_model: int, d_ff: int,
         g = graph.mlp_graph(m=m, d_model=d_model, d_ff=d_ff, dtype=dtype,
                             gated=gated, act=act)
         try:
-            schedule = partition.plan_chain(g, vmem_budget=vmem_budget
-                                            ).schedule
+            schedule = partition.plan_chain(g, target=target).schedule
         except InfeasibleError:
             schedule = "unfused"
         ctx = ExecContext(kind="mlp", platform=plat, schedule=schedule,
                           m=m, d_model=d_model, d_ff=d_ff, dtype=dtype,
-                          gated=gated, act=act)
+                          gated=gated, act=act, target=target)
         ex = find("mlp", ctx)
     else:
         raise ValueError(f"unknown ftl_mode {mode!r}")
-    if vmem_budget != DEFAULT_VMEM_BUDGET:
-        # run under the budget the schedule was resolved with, not the
-        # module default (affects the scan executors' token-tile choice)
-        ex = dataclasses.replace(
-            ex, run=functools.partial(ex.run, vmem_budget=vmem_budget))
-    return ex
+    # run under the target the schedule was resolved with, not whatever the
+    # process default happens to be at run time (affects the scan
+    # executors' token-tile choice)
+    return dataclasses.replace(
+        ex, run=functools.partial(ex.run, target=target))
 
 
 def mlp_executor(
@@ -426,16 +451,18 @@ def mlp_executor(
     dtype: str,
     gated: bool,
     act: str,
-    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    target: hwlib.Target | None = None,
 ) -> Executor:
-    """Resolve the MLP executor for ``ftl_mode`` at the given shapes.
+    """Resolve the MLP executor for ``ftl_mode`` at the given shapes on
+    ``target`` (None → the default target).
 
     ``'auto'`` is plan-driven: the fusion partitioner's chosen schedule
     picks the implementation (Pallas fused kernel on TPU, scan executor
     for a fused/partial schedule elsewhere, layer-per-layer baseline when
     the planner rejects fusion)."""
+    target = target if target is not None else hwlib.default_target()
     return _mlp_executor_cached(mode, m, d_model, d_ff, dtype, gated, act,
-                                vmem_budget, platform())
+                                target, platform())
 
 
 # ---------------------------------------------------------------------------

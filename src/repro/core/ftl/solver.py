@@ -1,13 +1,17 @@
 """FTL tile-size solver (paper step 4).
 
 Exact branch-and-bound over the aligned-divisor lattice of every dim
-variable in a (possibly fused) group, minimizing the HBM<->VMEM traffic of
-the cost model subject to the VMEM capacity constraint.
+variable in a (possibly fused) group, minimizing the *modeled transfer
+time* of the cost model on the planning :class:`~repro.core.hw.Target`
+(bytes/bw + transfers·dma_setup, per backing level) subject to the fast
+level's capacity constraint.
 
 Pruning relies on two monotonicities:
-  * VMEM footprint grows with tile sizes  -> feasibility prune from below,
-  * traffic shrinks with tile sizes       -> optimistic bound with the
-    remaining dims at full size is a valid lower bound.
+  * fast-memory footprint grows with tile sizes -> feasibility prune from
+    below,
+  * per-tensor traffic AND DMA count shrink with tile sizes — and the
+    per-tensor level weights are tile-independent — so the modeled time
+    with the remaining dims at full size is a valid lower bound.
 
 Groups have <= ~8 dims with <= 14 candidates each; with the two prunes the
 search visits a few thousand nodes in practice (tested up to production
@@ -18,18 +22,16 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
+from repro.core import hw as hwlib
+
 from .constraints import build_dim_constraints
 from .cost import CostReport, evaluate, min_traffic_bound, vmem_usage
 from .ir import FusionGroup
 from .plan import TilePlan
 
-# TPU v5e-class VMEM budget (bytes).  The planner leaves headroom for the
-# pipeline machinery / semaphores, matching what pallas itself can claim.
-DEFAULT_VMEM_BUDGET = 96 * 1024 * 1024
-
 
 class InfeasibleError(RuntimeError):
-    """No tile assignment fits the memory budget."""
+    """No tile assignment fits the target's fast memory."""
 
 
 @dataclasses.dataclass
@@ -43,32 +45,37 @@ class _SearchState:
 def solve(
     group: FusionGroup,
     *,
-    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    target: hwlib.Target | None = None,
     sharded_sizes: Mapping[str, int] | None = None,
     whole_dims: frozenset[str] = frozenset(),
     double_buffer: bool = True,
 ) -> TilePlan:
-    """Plan tiling for ``group``; returns the optimal :class:`TilePlan`."""
+    """Plan tiling for ``group`` on ``target`` (None → the default target);
+    returns the optimal :class:`TilePlan`."""
+    target = target if target is not None else hwlib.default_target()
+    budget = target.fast_capacity
     group.validate()
     cons = build_dim_constraints(
         group, sharded_sizes=sharded_sizes, whole_dims=whole_dims
     )
     names = sorted(
         cons,
-        # Put large dims first: their candidate choice constrains VMEM most,
-        # so pruning bites early.
+        # Put large dims first: their candidate choice constrains the fast
+        # footprint most, so pruning bites early.
         key=lambda n: -cons[n].size,
     )
     state = _SearchState()
 
     def leaf(tiles: dict[str, int]) -> None:
-        rep = evaluate(group, tiles, cons, double_buffer=double_buffer)
-        if rep.vmem_bytes > vmem_budget:
+        rep = evaluate(group, tiles, cons, target=target,
+                       double_buffer=double_buffer)
+        if rep.vmem_bytes > budget:
             return
         steps = 1
         for _, c in rep.grid:
             steps *= c
-        key = (rep.traffic_bytes, rep.dma_transfers, steps)
+        key = (rep.transfer_time_s, rep.traffic_bytes, rep.dma_transfers,
+               steps)
         if state.best_key is None or key < state.best_key:
             state.best_key = key
             state.best_tiles = dict(tiles)
@@ -87,7 +94,7 @@ def solve(
             probe = dict(tiles)
             for j in range(i + 1, len(names)):
                 probe[names[j]] = cons[names[j]].candidates[0]
-            if vmem_usage(group, probe, cons, double_buffer=double_buffer) > vmem_budget:
+            if vmem_usage(group, probe, cons, double_buffer=double_buffer) > budget:
                 # candidates ascend; larger c only makes it worse.
                 del tiles[name]
                 break
@@ -96,10 +103,13 @@ def solve(
                 opt = dict(tiles)
                 for j in range(i + 1, len(names)):
                     opt[names[j]] = cons[names[j]].size
-                rep = evaluate(group, opt, cons, double_buffer=double_buffer)
-                # (t, 0, 0) >= best_key can only hold via t > best traffic
-                # (dma >= 1 always), so the compound test reduces to this:
-                if rep.traffic_bytes > state.best_key[0]:
+                rep = evaluate(group, opt, cons, target=target,
+                               double_buffer=double_buffer)
+                # every leaf below this node costs at least the full-size
+                # time (traffic and DMA count both shrink as tiles grow),
+                # so a strictly worse optimistic time cannot improve on
+                # the incumbent.
+                if rep.transfer_time_s > state.best_key[0]:
                     continue
             dfs(i + 1, tiles)
         tiles.pop(name, None)
@@ -107,7 +117,8 @@ def solve(
     dfs(0, {})
     if state.best_tiles is None:
         raise InfeasibleError(
-            f"group {group.name}: no tile assignment fits {vmem_budget} B VMEM "
+            f"group {group.name}: no tile assignment fits the {budget} B "
+            f"{target.fast.name} of target {target.name} "
             f"(lower bound traffic {min_traffic_bound(group, cons)} B)"
         )
     return TilePlan(
@@ -115,6 +126,6 @@ def solve(
         tiles=state.best_tiles,
         constraints=cons,
         report=state.best_report,
-        vmem_budget=vmem_budget,
+        target=target,
         nodes_explored=state.nodes,
     )

@@ -1,0 +1,279 @@
+"""First-class memory-hierarchy targets for the FTL planning stack.
+
+The paper's claim is about a *multi-level* software-managed hierarchy:
+fusion on Siracusa trades L2/L3 (off-chip) transfers against L1 residency,
+with DMA setup cost a second-order term.  Everything that prices a plan —
+the tile solver, the fusion partitioner, the executor registry, the
+roofline — therefore takes a :class:`Target` instead of a bare VMEM-budget
+int, so the whole stack agrees about the machine and re-planning for a
+different hierarchy is one argument, not a constant hunt.
+
+A :class:`Target` is an ordered fast→backing list of :class:`MemoryLevel`s
+plus a peak-FLOP/s figure:
+
+* ``levels[0]`` is the software-managed fast memory the planner tiles for
+  (VMEM on TPU, L1 TCDM on Siracusa).  Its ``capacity_bytes`` is the tile
+  budget; its bandwidth/DMA fields describe the core↔fast path and are
+  not used by the boundary cost model.
+* ``levels[1:]`` are the backing tiers, shallow→deep.  Each level's
+  ``bw_bytes_per_s`` / ``dma_setup_s`` describe the DMA path between that
+  level and the fast memory.  The cost model assigns every streamed
+  tensor a *home level* (smallest-first first-fit, so a big intermediate
+  spills past a full L2 exactly like the paper's Fig. 3 regime) and
+  prices its traffic at that level's bandwidth.
+
+Presets: :data:`TPU_V5E` (the repo's serving target), :data:`CPU_CACHE`
+(a cache-blocked x86 core), and :data:`RV32_L1_L2` (Siracusa-like RV32
+cluster: L1 TCDM fast level with L2/L3 backing — the paper's platform).
+
+The process-wide default is :func:`default_target` (``FTL_TARGET`` env
+var, else ``tpu_v5e``); planners resolve ``target=None`` through it and
+carry the resolved target in their plan-cache keys, so switching targets
+can never serve a stale plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterable, Mapping
+
+KB = 1 << 10
+MB = 1 << 20
+GB = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryLevel:
+    """One tier of a software-managed memory hierarchy.
+
+    For backing levels (``Target.levels[1:]``), ``bw_bytes_per_s`` and
+    ``dma_setup_s`` describe the DMA path between this level and the fast
+    level — the boundary the planner's traffic crosses.
+    """
+
+    name: str
+    capacity_bytes: int
+    bw_bytes_per_s: float
+    dma_setup_s: float = 0.0
+
+    def __post_init__(self):
+        if self.capacity_bytes <= 0:
+            raise ValueError(f"level {self.name}: capacity must be positive")
+        if self.bw_bytes_per_s <= 0:
+            raise ValueError(f"level {self.name}: bandwidth must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """A machine the planner prices plans for: memory levels + peak FLOPs.
+
+    Hashable (all-frozen), so it participates directly in every plan
+    cache key.
+    """
+
+    name: str
+    levels: tuple[MemoryLevel, ...]
+    flops: float
+
+    def __post_init__(self):
+        if len(self.levels) < 2:
+            raise ValueError(
+                f"target {self.name}: need a fast level and at least one "
+                f"backing level, got {len(self.levels)}"
+            )
+        for shallow, deep in zip(self.levels, self.levels[1:]):
+            if deep.capacity_bytes < shallow.capacity_bytes:
+                raise ValueError(
+                    f"target {self.name}: level {deep.name} "
+                    f"({deep.capacity_bytes} B) smaller than the level "
+                    f"above it ({shallow.name}, {shallow.capacity_bytes} B)"
+                )
+
+    # ------------------------------------------------------------------
+    @property
+    def fast(self) -> MemoryLevel:
+        """The software-managed fast level the solver tiles for."""
+        return self.levels[0]
+
+    @property
+    def backing(self) -> tuple[MemoryLevel, ...]:
+        return self.levels[1:]
+
+    @property
+    def fast_capacity(self) -> int:
+        """The tile budget (bytes) — what `vmem_budget` used to be."""
+        return self.fast.capacity_bytes
+
+    # ------------------------------------------------------------------
+    def with_fast_capacity(self, capacity_bytes: int) -> "Target":
+        """This target with the fast level resized — the budget-sweep hook
+        tests and benchmarks use instead of raw ints.
+
+        A backing level the new fast level outgrows is *dropped* (its
+        traffic reprices at the next deeper tier), never silently
+        inflated: a scratchpad larger than L2 cannot be backed by that
+        L2, and inflating it would misprice spill traffic at the shallow
+        tier's bandwidth.  The deepest level is always kept.
+        """
+        fast = dataclasses.replace(
+            self.fast, capacity_bytes=int(capacity_bytes)
+        )
+        kept = tuple(lv for lv in self.backing[:-1]
+                     if lv.capacity_bytes >= capacity_bytes)
+        deep = self.backing[-1]
+        if deep.capacity_bytes < capacity_bytes:
+            deep = dataclasses.replace(
+                deep, capacity_bytes=int(capacity_bytes)
+            )
+        return dataclasses.replace(
+            self, name=f"{self.name}@{capacity_bytes}B",
+            levels=(fast,) + kept + (deep,)
+        )
+
+    # ------------------------------------------------------------------
+    def assign_homes(
+        self, footprints: Mapping[str, int]
+    ) -> dict[str, MemoryLevel]:
+        """Home backing level per tensor: smallest-first first-fit.
+
+        Small tensors claim the shallow tiers; whatever no longer fits
+        spills deeper (the deepest level always accepts).  This is the
+        paper's L2-overflow mechanism: a big fused-away intermediate that
+        *would* have streamed now never competes for L2 at all, while the
+        unfused schedule's intermediate spills to L3.
+        """
+        free = {lv.name: lv.capacity_bytes for lv in self.backing}
+        homes: dict[str, MemoryLevel] = {}
+        for tname in sorted(footprints, key=lambda n: (footprints[n], n)):
+            placed = None
+            for lv in self.backing[:-1]:
+                if footprints[tname] <= free[lv.name]:
+                    free[lv.name] -= footprints[tname]
+                    placed = lv
+                    break
+            homes[tname] = placed if placed is not None else self.backing[-1]
+        return homes
+
+    def transfer_time(
+        self,
+        bytes_by_level: Mapping[str, int],
+        transfers_by_level: Mapping[str, int],
+    ) -> float:
+        """Modeled DMA time: Σ_level bytes/bw + transfers·dma_setup."""
+        by_name = {lv.name: lv for lv in self.backing}
+        t = 0.0
+        for name, b in bytes_by_level.items():
+            t += b / by_name[name].bw_bytes_per_s
+        for name, n in transfers_by_level.items():
+            t += n * by_name[name].dma_setup_s
+        return t
+
+    # ------------------------------------------------------------------
+    def describe(self) -> str:
+        parts = [
+            f"{lv.name} {_fmt_bytes(lv.capacity_bytes)}"
+            + (f" @{lv.bw_bytes_per_s / 1e9:g} GB/s" if i else "")
+            for i, lv in enumerate(self.levels)
+        ]
+        return f"{self.name}: " + " <- ".join(parts) + \
+            f", {self.flops / 1e12:g} TFLOP/s"
+
+
+def _fmt_bytes(n: int) -> str:
+    if n >= 1 << 48:
+        return "unbounded"
+    for unit, tag in ((1 << 30, "GiB"), (1 << 20, "MiB"), (1 << 10, "KiB")):
+        if n >= unit:
+            return f"{n / unit:.3g} {tag}"
+    return f"{n} B"
+
+
+# ---------------------------------------------------------------------------
+# presets
+# ---------------------------------------------------------------------------
+
+# TPU v5e class (task-specified constants).  The fast level is the 96 MiB
+# the planner may claim — the physical 128 MiB VMEM minus the headroom the
+# Pallas pipeline machinery / semaphores need.  ICI-reachable remote HBM
+# plays the deep-tier role for the roofline's collective term.
+TPU_V5E = Target(
+    name="tpu_v5e",
+    levels=(
+        MemoryLevel("vmem", 96 * MB, 2.0e13),
+        MemoryLevel("hbm", int(16e9), 819e9, dma_setup_s=1e-6),
+        MemoryLevel("ici", 1 << 50, 50e9, dma_setup_s=5e-6),
+    ),
+    flops=197e12,
+)
+
+# Cache-blocked x86 core: the "software-managed" fast level is the slice
+# of private L2 a blocked kernel keeps hot; hardware prefetch makes the
+# per-transfer setup effectively zero.
+CPU_CACHE = Target(
+    name="cpu_cache",
+    levels=(
+        MemoryLevel("l2", 1 * MB, 150e9),
+        MemoryLevel("llc", 32 * MB, 80e9),
+        MemoryLevel("dram", 64 * GB, 25e9),
+    ),
+    flops=1e12,
+)
+
+# Siracusa-like RV32 cluster (the paper's platform): 256 KiB L1 TCDM fed
+# by DMA from 2 MiB on-chip L2, off-chip L3 behind a HyperBus-class link.
+# Constants match benchmarks/hw_profiles.py (order-of-magnitude estimates
+# from the Siracusa/PULP literature).
+RV32_L1_L2 = Target(
+    name="rv32_l1_l2",
+    levels=(
+        MemoryLevel("l1", 256 * KB, 8e9),
+        MemoryLevel("l2", 2 * MB, 2.0e9, dma_setup_s=2e-6),
+        MemoryLevel("l3", 512 * MB, 0.35e9, dma_setup_s=2e-6),
+    ),
+    flops=6e9,
+)
+
+PRESETS: dict[str, Target] = {
+    t.name: t for t in (TPU_V5E, CPU_CACHE, RV32_L1_L2)
+}
+
+
+def get_target(name: str) -> Target:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown target {name!r}; presets: {sorted(PRESETS)}"
+        ) from None
+
+
+def presets() -> Iterable[Target]:
+    return tuple(PRESETS.values())
+
+
+# ---------------------------------------------------------------------------
+# process-wide default
+# ---------------------------------------------------------------------------
+
+_DEFAULT: list[Target | None] = [None]
+
+
+def default_target() -> Target:
+    """The target planners resolve ``target=None`` through.
+
+    Order: :func:`set_default_target` override, then the ``FTL_TARGET``
+    env var (a preset name), then :data:`TPU_V5E`.
+    """
+    if _DEFAULT[0] is not None:
+        return _DEFAULT[0]
+    env = os.environ.get("FTL_TARGET")
+    if env:
+        return get_target(env)
+    return TPU_V5E
+
+
+def set_default_target(target: Target | str | None) -> None:
+    """Set (or with ``None`` clear) the process-wide default target."""
+    if isinstance(target, str):
+        target = get_target(target)
+    _DEFAULT[0] = target

@@ -17,6 +17,7 @@ from typing import Literal
 import jax
 
 from repro.core import ftl
+from repro.core import hw as hwlib
 
 from . import ref as _ref
 from .flash_attention import flash_attention as _flash
@@ -46,31 +47,33 @@ def _resolve(backend: Backend) -> str:
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=512)
-def plan_mlp_blocks(
-    m: int, k: int, f: int, dtype: str, gated: bool, act: str,
-    vmem_budget: int = ftl.DEFAULT_VMEM_BUDGET,
-) -> tuple[int, int]:
-    """(block_m, block_f) for the fused_mlp kernel from the FTL solver."""
+def _plan_mlp_blocks(m: int, k: int, f: int, dtype: str, gated: bool,
+                     act: str, target: hwlib.Target) -> tuple[int, int]:
     group = ftl.fusion.mlp(
         m=m, d_model=k, d_ff=f, dtype=dtype, gated=gated, act=act, fuse=True
     )
-    plan = ftl.solve(
-        group, vmem_budget=vmem_budget, whole_dims=frozenset({"K", "N"})
-    )
+    plan = ftl.solve(group, target=target, whole_dims=frozenset({"K", "N"}))
     return plan.tile("M"), plan.tile("F")
 
 
+def plan_mlp_blocks(
+    m: int, k: int, f: int, dtype: str, gated: bool, act: str,
+    target: hwlib.Target | None = None,
+) -> tuple[int, int]:
+    """(block_m, block_f) for the fused_mlp kernel from the FTL solver."""
+    return _plan_mlp_blocks(m, k, f, dtype, gated, act,
+                            target if target is not None
+                            else hwlib.default_target())
+
+
 @functools.lru_cache(maxsize=512)
-def plan_gemm_blocks(
-    m: int, k: int, n: int, dtype: str, act: str | None,
-    vmem_budget: int = ftl.DEFAULT_VMEM_BUDGET,
-) -> tuple[int, int, int]:
-    """(block_m, block_n, block_k) for gemm / gemm_act kernels."""
+def _plan_gemm_blocks(m: int, k: int, n: int, dtype: str, act: str | None,
+                      target: hwlib.Target) -> tuple[int, int, int]:
     if act is None:
         group = ftl.fusion.gemm_chain(m=m, dims_kn=[k, n], dtype=dtype)
     else:
         group = ftl.fusion.gemm_act(m=m, k=k, n=n, dtype=dtype, act=act)
-    plan = ftl.solve(group, vmem_budget=vmem_budget)
+    plan = ftl.solve(group, target=target)
     dims = plan.tiles
     bm = dims.get("M", m)
     bk = dims.get("K", dims.get("K0", k))
@@ -78,16 +81,21 @@ def plan_gemm_blocks(
     return bm, bn, bk
 
 
+def plan_gemm_blocks(
+    m: int, k: int, n: int, dtype: str, act: str | None,
+    target: hwlib.Target | None = None,
+) -> tuple[int, int, int]:
+    """(block_m, block_n, block_k) for gemm / gemm_act kernels."""
+    return _plan_gemm_blocks(m, k, n, dtype, act,
+                             target if target is not None
+                             else hwlib.default_target())
+
+
 @functools.lru_cache(maxsize=512)
-def plan_attention_blocks(
-    tq: int, tk: int, dh: int, dtype: str,
-    vmem_budget: int = ftl.DEFAULT_VMEM_BUDGET,
-) -> tuple[int, int]:
-    """(block_q, block_k) for flash attention; Tk is re-tiled if the solver
-    kept it whole (its VMEM model allows a whole-row S tile; the kernel
-    streams Tk for the online softmax)."""
-    plan = ftl.plan_attention(q_len=tq, kv_len=tk, head_dim=dh, dtype=dtype,
-                              vmem_budget=vmem_budget)
+def _plan_attention_blocks(tq: int, tk: int, dh: int, dtype: str,
+                           target: hwlib.Target) -> tuple[int, int]:
+    g = ftl.attention_graph(q_len=tq, kv_len=tk, head_dim=dh, dtype=dtype)
+    plan = ftl.plan_fixed(g, (), target=target).segments[0].plan
     bq = plan.tile("Tq")
     bk = min(plan.tile("Tk"), max(512, bq))
     while tk % bk:
@@ -95,38 +103,53 @@ def plan_attention_blocks(
     return bq, max(bk, 1)
 
 
+def plan_attention_blocks(
+    tq: int, tk: int, dh: int, dtype: str,
+    target: hwlib.Target | None = None,
+) -> tuple[int, int]:
+    """(block_q, block_k) for flash attention; Tk is re-tiled if the solver
+    kept it whole (its VMEM model allows a whole-row S tile; the kernel
+    streams Tk for the online softmax)."""
+    return _plan_attention_blocks(tq, tk, dh, dtype,
+                                  target if target is not None
+                                  else hwlib.default_target())
+
+
 # ---------------------------------------------------------------------------
 # ops
 # ---------------------------------------------------------------------------
 
-def gemm(x, w, *, backend: Backend = "auto"):
+def gemm(x, w, *, backend: Backend = "auto",
+         target: hwlib.Target | None = None):
     if _resolve(backend) == "ref":
         return _ref.gemm(x, w)
     bm, bn, bk = plan_gemm_blocks(x.shape[0], x.shape[1], w.shape[1],
-                                  str(x.dtype), None)
+                                  str(x.dtype), None, target)
     return _gemm(x, w, block_m=bm, block_n=bn, block_k=bk,
                  interpret=_interpret())
 
 
-def gemm_act(x, w, b=None, *, act: str = "gelu", backend: Backend = "auto"):
+def gemm_act(x, w, b=None, *, act: str = "gelu", backend: Backend = "auto",
+             target: hwlib.Target | None = None):
     """The paper's benchmark op."""
     if _resolve(backend) == "ref":
         return _ref.gemm_act(x, w, b, act=act)
     bm, bn, bk = plan_gemm_blocks(x.shape[0], x.shape[1], w.shape[1],
-                                  str(x.dtype), act)
+                                  str(x.dtype), act, target)
     return _gemm_act(x, w, b, act=act, block_m=bm, block_n=bn, block_k=bk,
                      interpret=_interpret())
 
 
 def fused_mlp(x, w1, w2, wg=None, b1=None, b2=None, *, act: str = "gelu",
-              backend: Backend = "auto"):
+              backend: Backend = "auto",
+              target: hwlib.Target | None = None):
     """Full fused MLP; x may have leading batch dims (flattened internally)."""
     if _resolve(backend) == "ref":
         return _ref.mlp(x, w1, w2, wg, b1, b2, act=act)
     *lead, m, k = x.shape
     xf = x.reshape(-1, k)
     bm, bf = plan_mlp_blocks(xf.shape[0], k, w1.shape[1], str(x.dtype),
-                             wg is not None, act)
+                             wg is not None, act, target)
     y = _fused_mlp(xf, w1, w2, wg, b1, b2, act=act, block_m=bm, block_f=bf,
                    interpret=_interpret())
     return y.reshape(*lead, m, w2.shape[1])
@@ -147,19 +170,20 @@ def set_xla_attention(mode: str, *, min_len: int = 2048) -> None:
 
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
-              q_offset: int = 0, backend: Backend = "auto"):
+              q_offset: int = 0, backend: Backend = "auto",
+              target: hwlib.Target | None = None):
     if _resolve(backend) == "ref":
         tk = k.shape[2]
         if _XLA_ATTN["mode"] == "blockwise" and tk >= _XLA_ATTN["min_len"]:
             _, bk = plan_attention_blocks(q.shape[2], tk, q.shape[3],
-                                          str(q.dtype))
+                                          str(q.dtype), target)
             return _ref.attention_blockwise(
                 q, k, v, causal=causal, window=window, q_offset=q_offset,
                 block_k=max(bk, 1024))
         return _ref.attention(q, k, v, causal=causal, window=window,
                               q_offset=q_offset)
     bq, bk = plan_attention_blocks(q.shape[2], k.shape[2], q.shape[3],
-                                   str(q.dtype))
+                                   str(q.dtype), target)
     return _flash(q, k, v, causal=causal, window=window, q_offset=q_offset,
                   block_q=bq, block_k=bk, interpret=_interpret())
 

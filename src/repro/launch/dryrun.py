@@ -40,9 +40,11 @@ from repro.data.pipeline import make_batch_shapes      # noqa: E402
 from repro.distributed.sharding import (               # noqa: E402
     batch_pspecs, dp_axes, param_pspecs, to_shardings)
 from repro.launch.mesh import make_production_mesh     # noqa: E402
+from repro.core import hw as hw_targets                # noqa: E402
 from repro.models import model as M                    # noqa: E402
 from repro.optim import OptConfig                      # noqa: E402
 from repro.roofline import model_flops, roofline  # noqa: E402
+from repro.roofline.analysis import HW                 # noqa: E402
 from repro.roofline.hlo_cost import analyze as hlo_analyze  # noqa: E402
 from repro.train import steps as S                     # noqa: E402
 
@@ -159,10 +161,14 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     # XLA's own cost_analysis counts while bodies once — kept for reference.
     hc = hlo_analyze(hlo)
     cost = {"flops": hc["flops"], "bytes accessed": hc["bytes"]}
+    # the roofline machine is the same Target the FTL planner priced its
+    # plans against (hw.default_target / FTL_TARGET), recorded per cell
+    target = hw_targets.default_target()
     rep = roofline(arch=arch, shape=shape, mesh_shape=mesh_shape,
                    cost=cost, hlo_text=None,
                    coll_bytes=int(hc["collective_bytes"]),
-                   model_flops_total=model_flops(cfg, shape))
+                   model_flops_total=model_flops(cfg, shape),
+                   hw=HW.from_target(target))
 
     mem_rec = {}
     for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
@@ -176,6 +182,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "arch": arch, "shape": shape_name,
         "mesh": "x".join(map(str, mesh_shape)), "chips": rep.chips,
         "kind": shape.kind,
+        "ftl_target": target.name,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "cost": {"flops_per_chip": hc["flops"],
                  "bytes_per_chip": hc["bytes"],

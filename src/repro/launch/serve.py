@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import hw
 from repro.core.ftl import InfeasibleError
 from repro.core.ftl import registry as ftl_registry
 from repro.models import model as M
@@ -58,7 +59,9 @@ class ServeEngine:
         # whole block (projections + attention core + MLP) goes through
         # one partitioner and the executor registry binds each planned
         # fusion group.  Families without a plannable block (pure SSM)
-        # serve without one.
+        # serve without one.  The plan is priced for the process-default
+        # memory-hierarchy target; stats record which one so a plan made
+        # for the wrong machine is visible in serving logs.
         try:
             self.block_plan = ftl_registry.plan_block(cfg, m=max_seq)
         except (ValueError, InfeasibleError):
@@ -67,6 +70,8 @@ class ServeEngine:
             "prefills": 0, "decode_steps": 0, "tokens": 0,
             "ftl_schedule": (self.block_plan.schedule
                              if self.block_plan else "n/a"),
+            "ftl_target": (self.block_plan.target.name
+                           if self.block_plan else hw.default_target().name),
             "block_exec": "n/a",
         }
 
@@ -253,6 +258,7 @@ def main() -> None:
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
                       max_seq=args.max_seq)
     if eng.block_plan is not None:
+        print(f"FTL plan target: {eng.block_plan.target.describe()}")
         print(eng.block_plan.summary())
         exec_stats = eng.execute_block_plan()
         if exec_stats is not None:

@@ -57,9 +57,9 @@ def build(args):
                  if cfg.ftl_mode != "off" else
                  "report only — ftl_mode='off' runs the baseline; pass "
                  "--ftl-mode auto to execute it")
-        logging.info("FTL block plan (m=%d, %s):\n%s\n"
+        logging.info("FTL block plan (m=%d, target=%s, %s):\n%s\n"
                      "  runtime executors: %s",
-                     args.seq, state, bp.summary(), execs)
+                     args.seq, bp.target.name, state, bp.summary(), execs)
     except (ValueError, InfeasibleError) as e:
         logging.info("FTL block plan unavailable (layer-per-layer path): "
                      "%s", e)

@@ -30,6 +30,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import hw
 from repro.core.ftl import InfeasibleError
 from repro.core.ftl import registry as ftl_registry
 from repro.distributed.act_sharding import constrain
@@ -211,23 +212,31 @@ def _scan_layers(cfg, stack: Params, kinds: list[str], x, *, positions, ctx,
 
 
 @functools.lru_cache(maxsize=256)
-def _block_plan(cfg, m: int, dtype: str):
-    """Cached per-(cfg, m, dtype) whole-block FTL plan, or None.
-
-    The one plan every block of the forward pass executes through
-    (``registry.plan_block`` additionally caches per platform).  None —
-    and the hand-sequenced path — when there is nothing to plan:
-    ``ftl_mode='off'`` is the full escape hatch (run_block would pin the
-    baseline executors anyway, so skipping the solver at trace time gives
-    the identical compute graph for free), pure SSM stacks have no
-    plannable block, and MoE FFNs route (not a chain).
-    """
+def _block_plan_cached(cfg, m: int, dtype: str, target):
     if cfg.is_moe or cfg.ftl_mode == "off":
         return None
     try:
-        return ftl_registry.plan_block(cfg, m=m, dtype=dtype)
+        return ftl_registry.plan_block(cfg, m=m, dtype=dtype, target=target)
     except (ValueError, InfeasibleError):
         return None
+
+
+def _block_plan(cfg, m: int, dtype: str, target=None):
+    """Cached per-(cfg, m, dtype, target) whole-block FTL plan, or None.
+
+    The one plan every block of the forward pass executes through
+    (``registry.plan_block`` additionally caches per platform).  The
+    planning target is resolved *before* the cache lookup so changing the
+    default target (hw.set_default_target / FTL_TARGET) can never serve a
+    plan made for a different hierarchy.  None — and the hand-sequenced
+    path — when there is nothing to plan: ``ftl_mode='off'`` is the full
+    escape hatch (run_block would pin the baseline executors anyway, so
+    skipping the solver at trace time gives the identical compute graph
+    for free), pure SSM stacks have no plannable block, and MoE FFNs
+    route (not a chain).
+    """
+    target = target if target is not None else hw.default_target()
+    return _block_plan_cached(cfg, m, dtype, target)
 
 
 # ===========================================================================

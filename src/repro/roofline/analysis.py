@@ -26,8 +26,12 @@ from typing import Any
 
 import numpy as np
 
+from repro.core import hw as hw_targets
+
 # ---------------------------------------------------------------------------
-# hardware constants (TPU v5e class — task statement)
+# hardware constants — derived from the same repro.core.hw.Target the FTL
+# planner prices plans against, so roofline and FTL can never disagree
+# about the machine.
 # ---------------------------------------------------------------------------
 
 
@@ -37,10 +41,28 @@ class HW:
     hbm_bw: float = 819e9               # bytes/s per chip
     ici_bw: float = 50e9                # bytes/s per link
     hbm_bytes: float = 16e9             # capacity per chip
-    vmem_bytes: float = 128 * 2**20
+    vmem_bytes: float = 96 * 2**20
+    target_name: str = "tpu_v5e"
+
+    @classmethod
+    def from_target(cls, t: hw_targets.Target) -> "HW":
+        """Roofline view of a planning Target: the first backing level
+        plays the HBM role, the deepest level's link the collective role
+        (remote HBM over ICI on tpu_v5e)."""
+        backing = t.levels[1]
+        deep = t.levels[-1]
+        return cls(
+            peak_flops=t.flops,
+            hbm_bw=backing.bw_bytes_per_s,
+            ici_bw=deep.bw_bytes_per_s if deep is not backing
+            else backing.bw_bytes_per_s,
+            hbm_bytes=float(backing.capacity_bytes),
+            vmem_bytes=float(t.fast.capacity_bytes),
+            target_name=t.name,
+        )
 
 
-DEFAULT_HW = HW()
+DEFAULT_HW = HW.from_target(hw_targets.TPU_V5E)
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
@@ -243,6 +265,7 @@ class RooflineReport:
     def row(self) -> dict[str, Any]:
         return {
             "arch": self.arch, "shape": self.shape,
+            "target": self.hw.target_name,
             "mesh": "x".join(map(str, self.mesh)), "chips": self.chips,
             "t_compute_s": round(self.t_compute, 6),
             "t_memory_s": round(self.t_memory, 6),

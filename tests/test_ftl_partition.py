@@ -8,11 +8,15 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.core import ftl
+from repro.core import ftl, hw
 from repro.core.ftl import executor_xla, graph, partition, registry
 from repro.core.ftl.solver import InfeasibleError
 
 MB = 1 << 20
+
+
+def T(budget: int) -> hw.Target:
+    return hw.TPU_V5E.with_fast_capacity(budget)
 
 # Paper ViT-Base MLP dims (Fig. 3 benchmark).
 VIT_M, VIT_D, VIT_F = 3072, 768, 3072
@@ -28,9 +32,9 @@ class TestPartitionVsAuto:
         """Acceptance pin: on the paper's ViT-MLP shapes the DP selects the
         same schedule as auto.plan_mlp, with modeled traffic within 1%."""
         out = ftl.plan_mlp(m=VIT_M, d_model=VIT_D, d_ff=VIT_F,
-                           vmem_budget=budget)
+                           target=T(budget))
         g = graph.mlp_graph(m=VIT_M, d_model=VIT_D, d_ff=VIT_F)
-        chain = partition.plan_chain(g, vmem_budget=budget)
+        chain = partition.plan_chain(g, target=T(budget))
         assert chain.schedule == out.schedule
         assert abs(chain.traffic_bytes - out.chosen_traffic) <= \
             0.01 * out.chosen_traffic
@@ -38,10 +42,10 @@ class TestPartitionVsAuto:
     def test_dp_never_beats_itself_inconsistently(self):
         """DP traffic <= every canonical schedule it subsumes."""
         g = graph.mlp_graph(m=4096, d_model=1024, d_ff=4096)
-        chain = partition.plan_chain(g, vmem_budget=8 * MB)
+        chain = partition.plan_chain(g, target=T(8 * MB))
         for cuts in [(), (g.n_ops - 1,), partition.all_cuts(g)]:
             try:
-                fixed = partition.plan_fixed(g, cuts, vmem_budget=8 * MB)
+                fixed = partition.plan_fixed(g, cuts, target=T(8 * MB))
             except InfeasibleError:
                 continue
             assert chain.traffic_bytes <= fixed.traffic_bytes
@@ -51,10 +55,10 @@ class TestPartitionVsAuto:
         the DP must do at least as well and never pick full fusion."""
         g = graph.mlp_graph(m=8192, d_model=8192, d_ff=29568 // 16,
                             gated=True, act="silu")
-        chain = partition.plan_chain(g, vmem_budget=96 * MB)
+        chain = partition.plan_chain(g, target=hw.TPU_V5E)
         unf = partition.plan_fixed(g, partition.all_cuts(g),
-                                   vmem_budget=96 * MB)
-        fused = partition.plan_fixed(g, (), vmem_budget=96 * MB)
+                                   target=hw.TPU_V5E)
+        fused = partition.plan_fixed(g, (), target=hw.TPU_V5E)
         assert chain.traffic_bytes < unf.traffic_bytes
         assert chain.traffic_bytes < fused.traffic_bytes
         assert chain.schedule == "partial"
@@ -65,9 +69,9 @@ class TestPartitionVsAuto:
         for budget in (2 * MB, 8 * MB, 32 * MB, 96 * MB):
             g = graph.gemm_chain_graph(
                 m=2048, dims_kn=[512, 1024, 512, 1024])
-            chain = partition.plan_chain(g, vmem_budget=budget)
+            chain = partition.plan_chain(g, target=T(budget))
             unf = partition.plan_fixed(g, partition.all_cuts(g),
-                                       vmem_budget=budget)
+                                       target=T(budget))
             assert chain.traffic_bytes <= unf.traffic_bytes, budget
 
     def test_plan_attention_unchanged(self):
@@ -123,7 +127,7 @@ class TestOpGraph:
     def test_residual_epilogue(self):
         g = graph.mlp_graph(m=1024, d_model=512, d_ff=2048, residual=True)
         assert g.ops[-1].name == "residual"
-        chain = partition.plan_chain(g, vmem_budget=96 * MB)
+        chain = partition.plan_chain(g, target=hw.TPU_V5E)
         # residual fuses for free into the last segment
         last = chain.segments[-1]
         assert "residual" in last.op_names()
@@ -142,7 +146,7 @@ class TestOpGraph:
         core = [i for i, op in enumerate(g.ops)
                 if op.name.startswith("attn.")]
         assert all(g.repeats[i] == h for i in core)
-        chain = partition.plan_chain(g, vmem_budget=96 * MB)
+        chain = partition.plan_chain(g, target=hw.TPU_V5E)
         for s in chain.segments:
             assert not g.crosses_barrier(s.lo, s.hi)
         # traffic accounts per-head multiplicity
@@ -164,7 +168,7 @@ class TestOpGraph:
             g = graph.block_graph(cfg, m=64)
         except ValueError:
             pytest.skip("no plannable block for this family")
-        chain = partition.plan_chain(g, vmem_budget=96 * MB)
+        chain = partition.plan_chain(g, target=hw.TPU_V5E)
         names = [n for s in chain.segments for n in s.op_names()]
         assert names == [op.name for op in g.ops]     # covers whole chain
 
@@ -287,7 +291,7 @@ class TestScanExecutorGated:
         f = w1.shape[1]
         g = ftl.fusion.mlp(m=m, d_model=d, d_ff=f, dtype="float32",
                            gated=True, fuse=True)
-        plan = ftl.solve(g, vmem_budget=96 * MB)
+        plan = ftl.solve(g, target=hw.TPU_V5E)
         y = executor_xla.mlp_from_plan(plan, x, w1, w2, wg, b1, b2,
                                        act="silu")
         ref = _ref_mlp(x, w1, w2, wg, b1, b2, act="silu")

@@ -5,11 +5,15 @@ hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
-from repro.core import ftl
+from repro.core import ftl, hw
 from repro.core.ftl.ir import aligned_divisors
 from repro.core.ftl.solver import InfeasibleError
 
 MB = 1 << 20
+
+
+def T(budget: int) -> hw.Target:
+    return hw.TPU_V5E.with_fast_capacity(budget)
 
 dim = st.sampled_from([128, 256, 384, 512, 768, 1024, 2048, 4096])
 budget = st.sampled_from([2 * MB, 8 * MB, 32 * MB, 96 * MB])
@@ -22,7 +26,7 @@ def test_mlp_plan_invariants(m, k, n, b, gated, dtype):
     g = ftl.fusion.mlp(m=m, d_model=k, d_ff=n, dtype=dtype, gated=gated,
                        fuse=True)
     try:
-        plan = ftl.solve(g, vmem_budget=b)
+        plan = ftl.solve(g, target=T(b))
     except InfeasibleError:
         return
     # 1. every tile divides its dim
@@ -47,7 +51,7 @@ def test_mlp_plan_invariants(m, k, n, b, gated, dtype):
 @given(m=dim, k=dim, n=dim, b=budget)
 def test_fused_beats_or_equals_unfused_when_chosen(m, k, n, b):
     """The auto planner's decision is consistent with its own cost model."""
-    out = ftl.plan_mlp(m=m, d_model=k, d_ff=n, vmem_budget=b)
+    out = ftl.plan_mlp(m=m, d_model=k, d_ff=n, target=T(b))
     unfused_traffic = sum(p.traffic_bytes for p in out.unfused)
     if out.use_fused:
         assert out.fused.traffic_bytes <= unfused_traffic
@@ -69,7 +73,7 @@ def test_aligned_divisors_props(n, align):
 def test_gemm_chain_invariants(m, dims, b):
     g = ftl.fusion.gemm_chain(m=m, dims_kn=dims, fuse=True)
     try:
-        plan = ftl.solve(g, vmem_budget=b)
+        plan = ftl.solve(g, target=T(b))
     except InfeasibleError:
         return
     assert plan.vmem_bytes <= b

@@ -2,11 +2,16 @@
 → solver) and the headline fused-vs-unfused comparison."""
 import pytest
 
-from repro.core import ftl
+from repro.core import ftl, hw
 from repro.core.ftl.cost import n_tiles, vmem_usage
 from repro.core.ftl.solver import InfeasibleError
 
 MB = 1 << 20
+
+
+def T(budget: int) -> hw.Target:
+    """The TPU preset with its fast level resized to ``budget`` bytes."""
+    return hw.TPU_V5E.with_fast_capacity(budget)
 
 
 # ---------------------------------------------------------------------------
@@ -16,38 +21,39 @@ MB = 1 << 20
 class TestSolveBasics:
     def test_tiles_divide_dims(self):
         g = ftl.fusion.gemm_act(m=2048, k=768, n=3072, fuse=True)
-        plan = ftl.solve(g, vmem_budget=8 * MB)
+        plan = ftl.solve(g, target=T(8 * MB))
         for d, t in plan.tiles.items():
             assert plan.constraints[d].size % t == 0, (d, t)
 
-    def test_vmem_budget_respected(self):
+    def test_fast_capacity_respected(self):
         for budget in (2 * MB, 8 * MB, 64 * MB):
             g = ftl.fusion.gemm_act(m=4096, k=4096, n=4096, fuse=True)
-            plan = ftl.solve(g, vmem_budget=budget)
+            plan = ftl.solve(g, target=T(budget))
             assert plan.vmem_bytes <= budget
+            assert plan.vmem_budget == budget
 
     def test_infeasible_raises(self):
         g = ftl.fusion.gemm_act(m=4096, k=4096, n=4096, fuse=True)
         with pytest.raises(InfeasibleError):
-            ftl.solve(g, vmem_budget=1024)   # 1 KiB: nothing fits
+            ftl.solve(g, target=T(1024))   # 1 KiB: nothing fits
 
     def test_larger_budget_never_worse(self):
         g = lambda: ftl.fusion.mlp(m=8192, d_model=1024, d_ff=4096,
                                    fuse=True)
-        t_small = ftl.solve(g(), vmem_budget=4 * MB).traffic_bytes
-        t_big = ftl.solve(g(), vmem_budget=64 * MB).traffic_bytes
+        t_small = ftl.solve(g(), target=T(4 * MB)).traffic_bytes
+        t_big = ftl.solve(g(), target=T(64 * MB)).traffic_bytes
         assert t_big <= t_small
 
     def test_whole_dims_pinned(self):
         g = ftl.fusion.mlp(m=8192, d_model=1024, d_ff=4096, fuse=True)
-        plan = ftl.solve(g, vmem_budget=64 * MB,
+        plan = ftl.solve(g, target=T(64 * MB),
                          whole_dims=frozenset({"K", "N"}))
         assert plan.tile("K") == 1024
         assert plan.tile("N") == 1024
 
     def test_alignment_respected(self):
         g = ftl.fusion.gemm_act(m=2048, k=1024, n=4096, fuse=True)
-        plan = ftl.solve(g, vmem_budget=16 * MB)
+        plan = ftl.solve(g, target=T(16 * MB))
         for d, t in plan.tiles.items():
             c = plan.constraints[d]
             assert t % c.alignment == 0 or t == c.size, (d, t, c.alignment)
@@ -63,26 +69,29 @@ def test_pruned_search_matches_exhaustive_optimum():
 
     g = ftl.fusion.mlp(m=512, d_model=256, d_ff=512, fuse=True)
     budget = 2 * MB
-    plan = ftl.solve(g, vmem_budget=budget)
+    target = T(budget)
+    plan = ftl.solve(g, target=target)
 
     cons = ftl.build_dim_constraints(g)
     names = sorted(cons)
     best_key = None
     for combo in itertools.product(*(cons[n].candidates for n in names)):
         tiles = dict(zip(names, combo))
-        rep = evaluate(g, tiles, cons)
+        rep = evaluate(g, tiles, cons, target=target)
         if rep.vmem_bytes > budget:
             continue
         steps = 1
         for _, c in rep.grid:
             steps *= c
-        key = (rep.traffic_bytes, rep.dma_transfers, steps)
+        key = (rep.transfer_time_s, rep.traffic_bytes, rep.dma_transfers,
+               steps)
         if best_key is None or key < best_key:
             best_key = key
     steps = 1
     for _, c in plan.report.grid:
         steps *= c
-    assert (plan.traffic_bytes, plan.dma_transfers, steps) == best_key
+    assert (plan.report.transfer_time_s, plan.traffic_bytes,
+            plan.dma_transfers, steps) == best_key
 
 
 # ---------------------------------------------------------------------------
@@ -98,15 +107,15 @@ class TestPaperBenchmark:
         L2-overflow cliff is modeled in benchmarks/bench_paper_mlp.py."""
         kw = dict(m=3072, k=768, n=3072)
         fused = ftl.solve(ftl.fusion.gemm_act(fuse=True, **kw),
-                          vmem_budget=8 * MB)
-        unfused = [ftl.solve(g, vmem_budget=8 * MB)
+                          target=T(8 * MB))
+        unfused = [ftl.solve(g, target=T(8 * MB))
                    for g in ftl.fusion.gemm_act(fuse=False, **kw)]
         cmp = ftl.compare(fused, unfused)
         assert 0.30 < cmp.traffic_reduction < 0.70, cmp.summary()
 
     def test_full_mlp_fusion_wins_at_large_budget(self):
         out = ftl.plan_mlp(m=16384, d_model=1024, d_ff=4096,
-                           vmem_budget=96 * MB)
+                           target=hw.TPU_V5E)
         assert out.use_fused
         assert out.comparison.traffic_reduction > 0.2
 
@@ -115,12 +124,12 @@ class TestPaperBenchmark:
         exceed the intermediate savings — the auto planner must fall back
         (beyond-paper extension, DESIGN.md §4)."""
         out = ftl.plan_mlp(m=1024, d_model=768, d_ff=3072,
-                           vmem_budget=1 * MB)
+                           target=T(1 * MB))
         assert not out.use_fused
 
     def test_intermediate_never_in_hbm_traffic(self):
         g = ftl.fusion.mlp(m=8192, d_model=1024, d_ff=4096, fuse=True)
-        plan = ftl.solve(g, vmem_budget=64 * MB)
+        plan = ftl.solve(g, target=T(64 * MB))
         inter = {t.name for t in g.intermediate_tensors()}
         assert inter == {"h1", "h"}
         for name in inter:
@@ -134,7 +143,7 @@ class TestPaperBenchmark:
 class TestCostModel:
     def test_traffic_lower_bound_is_tensor_sizes(self):
         g = ftl.fusion.gemm_act(m=1024, k=512, n=1024, fuse=True)
-        plan = ftl.solve(g, vmem_budget=128 * MB)
+        plan = ftl.solve(g, target=T(128 * MB))
         sizes = {d: c.size for d, c in plan.constraints.items()}
         floor = sum(t.bytes_full(sizes) for t in g.hbm_tensors())
         assert plan.traffic_bytes >= floor
@@ -142,7 +151,7 @@ class TestCostModel:
     def test_single_block_traffic_equals_floor(self):
         # everything fits in VMEM -> each tensor moved exactly once
         g = ftl.fusion.gemm_act(m=256, k=256, n=256, fuse=True)
-        plan = ftl.solve(g, vmem_budget=128 * MB)
+        plan = ftl.solve(g, target=T(128 * MB))
         sizes = {d: c.size for d, c in plan.constraints.items()}
         floor = sum(t.bytes_full(sizes) for t in g.hbm_tensors())
         assert plan.traffic_bytes == floor
@@ -167,7 +176,7 @@ class TestCostModel:
 class TestShardingConstraints:
     def test_sharded_problem_plans_per_shard(self):
         g = ftl.fusion.mlp(m=65536, d_model=8192, d_ff=28672, fuse=True)
-        plan = ftl.solve(g, vmem_budget=96 * MB,
+        plan = ftl.solve(g, target=hw.TPU_V5E,
                          sharded_sizes={"M": 65536 // 16, "F": 28672 // 16})
         assert plan.constraints["M"].size == 4096
         assert plan.constraints["F"].size == 1792
@@ -202,7 +211,7 @@ class TestPartialFusion:
         costs +88 % traffic, but fusing only the activation epilogue
         (the paper's exact op) still beats layer-per-layer."""
         out = ftl.plan_mlp(m=8192, d_model=8192, d_ff=29568 // 16,
-                           gated=True, act="silu", vmem_budget=96 * MB)
+                           gated=True, act="silu", target=hw.TPU_V5E)
         assert out.schedule == "partial"
         unf = sum(p.traffic_bytes for p in out.unfused)
         par = sum(p.traffic_bytes for p in out.partial)
@@ -211,13 +220,13 @@ class TestPartialFusion:
 
     def test_full_fusion_still_chosen_when_best(self):
         out = ftl.plan_mlp(m=8192, d_model=4096, d_ff=11008 // 16,
-                           gated=True, act="silu", vmem_budget=96 * MB)
+                           gated=True, act="silu", target=hw.TPU_V5E)
         assert out.schedule == "fused"
         assert out.chosen_traffic == out.fused.traffic_bytes
 
     def test_chosen_traffic_is_min_of_schedules(self):
         out = ftl.plan_mlp(m=4096, d_model=1024, d_ff=4096,
-                           vmem_budget=8 * MB)
+                           target=T(8 * MB))
         cands = [sum(p.traffic_bytes for p in out.unfused)]
         if out.partial:
             cands.append(sum(p.traffic_bytes for p in out.partial))
