@@ -8,9 +8,11 @@ Two comparisons per arch:
   every planned segment to its bound executor).  Reduced configs so the
   wall-clock numbers are honest on CPU; on TPU the same harness times the
   Pallas kernels the registry binds there.
-* **modeled** — the partitioner's HBM traffic for the plan's schedule vs
-  the all-unfused partition at production dims (the number the measured
-  speedup should track on HBM-bound shapes).
+* **modeled** — the partitioner's HBM traffic and roofline runtime
+  (Σ_segment max(compute, transfer), with a ``compute_bound`` flag) for
+  the plan's schedule vs the all-unfused partition at production dims
+  (the numbers the measured speedup should track on HBM-bound shapes —
+  a compute-bound row predicts no speedup from fusion).
 
 Writes ``BENCH_block.json`` (consumed by the CI bench-smoke artifact) and
 prints both tables as CSV.  ``BENCH_SMOKE=1`` shrinks shapes/iterations.
@@ -149,12 +151,11 @@ def traffic_rows() -> list[dict]:
                 continue
             g = plan.graph
             try:
-                unfused = partition.plan_fixed(
+                unf = partition.plan_fixed(
                     g,
                     partition.all_cuts(g),
                     target=target,
                 )
-                unf = unfused.traffic_bytes
             except InfeasibleError:
                 unf = None
             row = {
@@ -167,15 +168,26 @@ def traffic_rows() -> list[dict]:
                     name: round(b / MB, 1)
                     for name, b in plan.per_level_traffic.items()
                 },
-                "plan_time_ms": round(1e3 * plan.chain.transfer_time_s, 3),
+                "plan_transfer_ms": round(
+                    1e3 * plan.chain.transfer_time_s, 3
+                ),
+                "plan_compute_ms": round(1e3 * plan.chain.compute_time_s, 3),
+                "plan_runtime_ms": round(
+                    1e3 * plan.chain.modeled_runtime_s, 3
+                ),
+                "compute_bound": plan.chain.compute_bound,
             }
             if unf:
-                row["unfused_MiB"] = round(unf / MB, 1)
+                row["unfused_MiB"] = round(unf.traffic_bytes / MB, 1)
+                row["unfused_runtime_ms"] = round(
+                    1e3 * unf.modeled_runtime_s, 3
+                )
                 row["traffic_red_%"] = round(
-                    100 * (1 - plan.traffic_bytes / unf), 1
+                    100 * (1 - plan.traffic_bytes / unf.traffic_bytes), 1
                 )
             else:
                 row["unfused_MiB"] = "infeasible"
+                row["unfused_runtime_ms"] = "-"
                 row["traffic_red_%"] = "-"
             rows.append(row)
     return rows

@@ -87,7 +87,8 @@ def bench_row(m: int, hw: TwoTierHW) -> dict:
         "auto_schedule": chosen.schedule,
         "plan_l2_MiB": round(per_level.get("l2", 0) / MB, 1),
         "plan_l3_MiB": round(per_level.get("l3", 0) / MB, 1),
-        "plan_time_ms": round(1e3 * chosen.transfer_time_s, 2),
+        "plan_runtime_ms": round(1e3 * chosen.modeled_runtime_s, 2),
+        "plan_bound": "compute" if chosen.compute_bound else "transfer",
         "traffic_red_matched_%": round(
             100 * (1 - fused.traffic_bytes / m_traffic), 1),
         "dma_red_matched_%": round(

@@ -44,7 +44,9 @@ def run() -> list[dict]:
                              "solve_ms": round(
                                  1e3 * (time.perf_counter() - t0), 1),
                              "nodes": "-", "traffic_MiB": "infeasible",
-                             "vmem_MiB": "-", "time_ms": "-"})
+                             "vmem_MiB": "-", "transfer_ms": "-",
+                             "compute_ms": "-", "runtime_ms": "-",
+                             "bound": "-"})
                 continue
             dt = time.perf_counter() - t0
             rows.append({
@@ -55,7 +57,10 @@ def run() -> list[dict]:
                 "nodes": plan.nodes_explored,
                 "traffic_MiB": round(plan.traffic_bytes / MB, 1),
                 "vmem_MiB": round(plan.vmem_bytes / MB, 2),
-                "time_ms": round(1e3 * plan.transfer_time_s, 3),
+                "transfer_ms": round(1e3 * plan.transfer_time_s, 3),
+                "compute_ms": round(1e3 * plan.compute_time_s, 3),
+                "runtime_ms": round(1e3 * plan.modeled_runtime_s, 3),
+                "bound": "compute" if plan.compute_bound else "transfer",
             })
     return rows
 

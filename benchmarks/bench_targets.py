@@ -11,10 +11,20 @@ so the measurement is target-sensitive even on one host).
 
 Writes ``BENCH_targets.json`` (uploaded by the CI bench-smoke job).
 
-**CI gate**: if the fused plan's modeled backing-store traffic exceeds
-the unfused schedule's on ANY preset the run fails — the paper's
-qualitative result (fusion removes the intermediate round trip) must
-hold on every hierarchy we claim to plan for.
+**CI gates** (both must hold on every preset, or the run fails):
+
+* *traffic*: the fused plan's modeled backing-store traffic must not
+  exceed the unfused schedule's — the paper's qualitative result
+  (fusion removes the intermediate round trip);
+* *runtime*: the fused plan's modeled runtime
+  (Σ_segment max(compute, transfer)) must not exceed the unfused
+  schedule's — fusion must never cost time under the planner's own
+  roofline objective, on any hierarchy we claim to plan for.
+
+Each schedule row reports ``modeled_runtime_ms`` with its compute /
+transfer split and a ``compute_bound`` flag, so a preset where fusion
+"wins" only because the op is compute-bound anyway is visible at a
+glance.
 """
 from __future__ import annotations
 
@@ -48,7 +58,10 @@ def _chain_stats(chain) -> dict:
         "traffic_bytes": chain.traffic_bytes,
         "per_level_traffic_bytes": chain.per_level_traffic,
         "dma_transfers": chain.dma_transfers,
-        "modeled_time_ms": round(1e3 * chain.transfer_time_s, 4),
+        "transfer_time_ms": round(1e3 * chain.transfer_time_s, 4),
+        "compute_time_ms": round(1e3 * chain.compute_time_s, 4),
+        "modeled_runtime_ms": round(1e3 * chain.modeled_runtime_s, 4),
+        "compute_bound": chain.compute_bound,
     }
 
 
@@ -81,13 +94,18 @@ def target_row(target: hw.Target, m: int) -> dict:
     solve_ms = round(1e3 * (time.perf_counter() - t0), 1)
     fused = partition.plan_fixed(g, (), target=target)
     unfused = partition.plan_fixed(g, partition.all_cuts(g), target=target)
-    gate_ok = fused.traffic_bytes <= unfused.traffic_bytes
+    gate_traffic = fused.traffic_bytes <= unfused.traffic_bytes
+    # runtimes compared through the objective's own tie canonicalization
+    # (hw.round_time) so an exact compute-bound tie never trips the gate
+    gate_runtime = (hw.round_time(fused.modeled_runtime_s)
+                    <= hw.round_time(unfused.modeled_runtime_s))
     return {
         "target": target.name,
         "levels": [
             {"name": lv.name, "capacity_bytes": lv.capacity_bytes,
              "bw_bytes_per_s": lv.bw_bytes_per_s,
-             "dma_setup_s": lv.dma_setup_s}
+             "dma_setup_s": lv.dma_setup_s,
+             "buffer_depth": lv.buffer_depth}
             for lv in target.levels
         ],
         "paper_op": {
@@ -97,10 +115,15 @@ def target_row(target: hw.Target, m: int) -> dict:
             "unfused": _chain_stats(unfused),
             "traffic_red_%": round(
                 100 * (1 - fused.traffic_bytes / unfused.traffic_bytes), 1),
+            "runtime_red_%": round(
+                100 * (1 - fused.modeled_runtime_s
+                       / unfused.modeled_runtime_s), 1),
         },
         "solve_ms": solve_ms,
         "measured_mlp": _measured_mlp_ms(target, m),
-        "gate_ok": gate_ok,
+        "gate_traffic_ok": gate_traffic,
+        "gate_runtime_ok": gate_runtime,
+        "gate_ok": gate_traffic and gate_runtime,
     }
 
 
@@ -112,12 +135,14 @@ def run() -> dict:
             rows.append(target_row(target, m))
         except InfeasibleError as e:
             rows.append({"target": target.name, "error": str(e),
+                         "gate_traffic_ok": False,
+                         "gate_runtime_ok": False,
                          "gate_ok": False})
     return {
         "smoke": smoke(),
         "m": m,
-        "gate": "fused modeled backing-store traffic <= unfused on every "
-                "preset",
+        "gate": "fused modeled backing-store traffic AND modeled runtime "
+                "<= unfused on every preset",
         "targets": rows,
     }
 
@@ -129,22 +154,31 @@ def main() -> None:
             print(f"{row['target']}: INFEASIBLE — {row['error']}")
             continue
         op = row["paper_op"]
-        print(f"{row['target']}: {op['chosen']['schedule']} chosen, "
+        bound = ("compute" if op["chosen"]["compute_bound"]
+                 else "transfer")
+        print(f"{row['target']}: {op['chosen']['schedule']} chosen "
+              f"({bound}-bound), "
               f"fused {op['fused']['traffic_bytes'] / MB:.1f} MiB "
               f"{op['fused']['per_level_traffic_bytes']} vs unfused "
               f"{op['unfused']['traffic_bytes'] / MB:.1f} MiB "
-              f"({op['traffic_red_%']}% red), "
+              f"({op['traffic_red_%']}% red), runtime "
+              f"{op['fused']['modeled_runtime_ms']} ms vs "
+              f"{op['unfused']['modeled_runtime_ms']} ms "
+              f"({op['runtime_red_%']}% red), "
               f"solve {row['solve_ms']} ms, "
               f"exec tile_m={row['measured_mlp']['tile_m']} "
               f"{row['measured_mlp']['wall_ms']} ms")
     with open(OUT, "w") as f:
         json.dump(result, f, indent=2)
     print(f"# wrote {OUT}")
-    bad = [r["target"] for r in result["targets"] if not r.get("gate_ok")]
-    if bad:
+    bad_traffic = [r["target"] for r in result["targets"]
+                   if not r.get("gate_traffic_ok")]
+    bad_runtime = [r["target"] for r in result["targets"]
+                   if not r.get("gate_runtime_ok")]
+    if bad_traffic or bad_runtime:
         raise RuntimeError(
-            f"target gate FAILED: fused modeled backing-store traffic "
-            f"exceeds unfused (or planning infeasible) on: {bad}")
+            f"target gate FAILED (or planning infeasible): traffic gate "
+            f"on {bad_traffic}, runtime gate on {bad_runtime}")
 
 
 if __name__ == "__main__":

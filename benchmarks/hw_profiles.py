@@ -42,13 +42,15 @@ class TwoTierHW:
 
     def target(self) -> hwlib.Target:
         """This profile as a planning :class:`repro.core.hw.Target`:
-        scratchpad fast level, L2 + (unbounded-above) L3 backing — the
-        same machine description the solver, partitioner and registry
-        consume, so the runtime model and the planner agree."""
+        DMA-fed (double-buffered) scratchpad fast level, L2 +
+        (unbounded-above) L3 backing — the same machine description the
+        solver, partitioner and registry consume, so the runtime model
+        and the planner agree."""
         return hwlib.Target(
             name=self.name,
             levels=(
-                hwlib.MemoryLevel("l1", self.scratch_bytes, 8e9),
+                hwlib.MemoryLevel("l1", self.scratch_bytes, 8e9,
+                                  buffer_depth=2),
                 hwlib.MemoryLevel("l2", self.l2_bytes, self.l2_bw,
                                   dma_setup_s=self.dma_setup_s),
                 hwlib.MemoryLevel("l3", 1 << 50, self.l3_bw,
@@ -83,8 +85,11 @@ TPU_V5E = TwoTierHW(
 
 def _dma_time(hw: TwoTierHW, bytes_l2: float, bytes_l3: float,
               transfers: int) -> float:
-    return (bytes_l2 / hw.l2_bw + bytes_l3 / hw.l3_bw
-            + transfers * hw.dma_setup_s)
+    """DMA time via the shared per-level formula
+    (``Target.transfer_time``: Σ bytes/bw + transfers·setup) on this
+    profile's own planning target — no second bandwidth model."""
+    return hw.target().transfer_time(
+        {"l2": bytes_l2, "l3": bytes_l3}, {"l2": transfers})
 
 
 def runtime_model_unfused(hw: TwoTierHW, *, macs: int, ew_elems: int,
@@ -92,16 +97,23 @@ def runtime_model_unfused(hw: TwoTierHW, *, macs: int, ew_elems: int,
                           ew_traffic: int, ew_dma: int,
                           intermediate_bytes: int) -> dict:
     """Layer-per-layer: GEMM kernel then a separate elementwise kernel,
-    each overlapping its own DMA (double buffering); the intermediate
-    spills to L3 when it exceeds free L2 (the paper's ViT-MLP case)."""
+    each overlapping its own DMA (double buffering) under the shared
+    ``hw.modeled_runtime`` rule; the intermediate spills to L3 when it
+    exceeds free L2 (the paper's ViT-MLP case).
+
+    This is the planner's Σ_segment max(compute, transfer) objective
+    with one refinement the single-rate Target cannot express: separate
+    MAC and elementwise engines (NPU vs cluster)."""
     spill = intermediate_bytes > hw.l2_bytes
     # gemm writes the intermediate; ew reads+writes it
     l3_g = intermediate_bytes if spill else 0
     l3_e = 2 * intermediate_bytes if spill else 0
-    t_gemm = max(macs / hw.macs_per_s,
-                 _dma_time(hw, gemm_traffic - l3_g, l3_g, gemm_dma))
-    t_ew = max(ew_elems / hw.ew_per_s,
-               _dma_time(hw, ew_traffic - l3_e, l3_e, ew_dma))
+    t_gemm = hwlib.modeled_runtime(
+        macs / hw.macs_per_s,
+        _dma_time(hw, gemm_traffic - l3_g, l3_g, gemm_dma))
+    t_ew = hwlib.modeled_runtime(
+        ew_elems / hw.ew_per_s,
+        _dma_time(hw, ew_traffic - l3_e, l3_e, ew_dma))
     return {"t_total_s": t_gemm + t_ew, "t_gemm_s": t_gemm, "t_ew_s": t_ew,
             "l3_bytes": l3_g + l3_e}
 
@@ -110,11 +122,12 @@ def runtime_model_fused(hw: TwoTierHW, *, macs: int, ew_elems: int,
                         traffic: int, dma: int) -> dict:
     """Fused: epilogue applied on the L1 tile.  With the NPU doing GEMMs
     the cluster's epilogue overlaps; cluster-only serializes epilogue
-    cycles into the compute term.  No intermediate, no spill."""
+    cycles into the compute term.  No intermediate, no spill — then the
+    shared ``hw.modeled_runtime`` overlap rule against the DMA time."""
     t_ew = ew_elems / hw.ew_per_s
     if hw.gemm_on_accel:
         t_compute = max(macs / hw.macs_per_s, t_ew)
     else:
         t_compute = macs / hw.macs_per_s + t_ew
-    t = max(t_compute, _dma_time(hw, traffic, 0, dma))
+    t = hwlib.modeled_runtime(t_compute, _dma_time(hw, traffic, 0, dma))
     return {"t_total_s": t, "t_compute_s": t_compute}

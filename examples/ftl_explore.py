@@ -48,15 +48,16 @@ def main() -> None:
 
     # --- preset sweep: same chain, three machines ------------------------
     print(f"{'target':>12} {'decision':>9} {'chosen MiB':>11} "
-          f"{'unfused MiB':>12} {'time ms':>9}  per-level")
+          f"{'unfused MiB':>12} {'runtime ms':>11} {'bound':>8}  per-level")
     for t in hw.presets():
         chain, fused, unf = _mlp_row(g, t)
         per = ", ".join(f"{n}={b / MB:.1f}M"
                         for n, b in chain.per_level_traffic.items())
+        bound = "compute" if chain.compute_bound else "transfer"
         print(f"{t.name:>12} {chain.schedule:>9} "
               f"{chain.traffic_bytes / MB:11.1f} "
               f"{unf.traffic_bytes / MB:12.1f} "
-              f"{1e3 * chain.transfer_time_s:9.2f}  {per}")
+              f"{1e3 * chain.modeled_runtime_s:11.2f} {bound:>8}  {per}")
 
     # --- capacity sweep on one target ------------------------------------
     base = hw.get_target(args.target)

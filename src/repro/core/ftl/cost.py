@@ -1,13 +1,21 @@
-"""FTL traffic / memory / transfer-time cost model.
+"""FTL traffic / memory / roofline-runtime cost model.
 
 Models what the paper's Fig. 3 measures on Siracusa: total bytes moved
 between the software-managed fast memory (VMEM here, L1 there) and the
-backing tiers (HBM here, L2/L3 there), the DMA-transfer count, and —
-since the machine is now a first-class :class:`repro.core.hw.Target` —
-the modeled *transfer time* those moves cost, which is the solver's
-objective:
+backing tiers (HBM here, L2/L3 there), the DMA-transfer count, the
+modeled *transfer time* those moves cost, and — since the FTL paper
+reports runtime (not bytes) as the win, and LoopTree shows compute-bound
+segments must be priced with a joint latency model — the **modeled
+runtime** that is the solver's objective:
 
-    time = Σ_level  bytes(level) / bw(level)  +  transfers(level) · dma_setup(level)
+    transfer = Σ_level  bytes(level) / bw(level)  +  transfers(level) · dma_setup(level)
+    compute  = group FLOPs / Target.flops
+    runtime  = max(compute, transfer)          (hw.modeled_runtime)
+
+Compute time depends only on the group's full dim sizes, so within one
+group the runtime objective reduces to: minimize transfer time while it
+dominates, and break pure-compute-bound ties by (traffic, DMA count) —
+fusion that buys no runtime must still not cost bytes.
 
 Each streamed tensor is assigned a *home* backing level by the target
 (smallest-first first-fit over level capacities — ``Target.assign_homes``),
@@ -34,7 +42,9 @@ are written exactly once (kernel-policy: ``contract_accumulate``).
 Intermediates of a fused group contribute **zero** backing-store traffic —
 that is the paper's entire point — but do occupy fast memory
 (single-buffered: they are produced and consumed in-core).  Streamed
-tensors are double-buffered.
+tensors are charged the fast level's ``buffer_depth`` (1 for a
+cache-backed fast level, 2 for a DMA double-buffered pipeline, 3+ for
+deeper prefetch) instead of a hard-coded ×2.
 """
 from __future__ import annotations
 
@@ -52,15 +62,28 @@ from .ir import FusionGroup, Role, TensorSpec
 class CostReport:
     traffic_bytes: int           # fast<->backing total
     dma_transfers: int           # number of block copies
-    vmem_bytes: int              # peak fast-memory footprint (double-buffered)
+    vmem_bytes: int              # peak fast-memory footprint (pipelined)
     grid: tuple[tuple[str, int], ...]   # (dim, n_tiles) outer->inner
     per_tensor_traffic: dict[str, int]
     macs: int
-    transfer_time_s: float = 0.0        # the solver's objective
+    transfer_time_s: float = 0.0        # modeled DMA time
+    compute_time_s: float = 0.0         # group FLOPs / Target.flops
+    flops: int = 0                      # modeled group FLOPs
     per_level_traffic: dict[str, int] = dataclasses.field(
         default_factory=dict)           # level name -> bytes
     per_level_transfers: dict[str, int] = dataclasses.field(
         default_factory=dict)           # level name -> DMA count
+
+    @property
+    def modeled_runtime_s(self) -> float:
+        """The solver's objective: compute and DMA overlap, the segment
+        takes whichever dominates (``hw.modeled_runtime``)."""
+        return hwlib.modeled_runtime(self.compute_time_s,
+                                     self.transfer_time_s)
+
+    @property
+    def compute_bound(self) -> bool:
+        return self.compute_time_s >= self.transfer_time_s
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -76,13 +99,24 @@ def vmem_usage(
     tiles: Mapping[str, int],
     cons: Mapping[str, DimConstraint],
     *,
-    double_buffer: bool = True,
+    buffer_depth: int = 2,
 ) -> int:
+    """Peak fast-memory footprint of a tile assignment.
+
+    Streamed tensors (inputs/weights/outputs) are charged
+    ``buffer_depth`` tile buffers — the staging pipeline of the target's
+    fast level (``Target.fast.buffer_depth``): 1 when a hardware cache
+    does the prefetching, 2 for classic DMA double-buffering, 3+ for
+    deeper pipelines.  Fused-away intermediates and accumulators live
+    single-buffered (produced and consumed in-core).
+    """
+    if buffer_depth < 1:
+        raise ValueError(f"buffer_depth must be >= 1, got {buffer_depth}")
     total = 0
     for t in group.tensors.values():
         b = t.bytes_tile(tiles)
         if t.role in (Role.INPUT, Role.WEIGHT, Role.OUTPUT):
-            total += b * (2 if double_buffer else 1)
+            total += b * buffer_depth
         elif t.role is Role.INTERMEDIATE:
             total += b
     for acc in accumulator_tensors(group, tiles, cons):
@@ -116,13 +150,14 @@ def evaluate(
     *,
     target: hwlib.Target | None = None,
     order: Sequence[str] | None = None,
-    double_buffer: bool = True,
 ) -> CostReport:
     """Cost of an assignment on ``target`` (None → the default target).
 
     If ``order`` is None the best grid order is chosen by enumeration
     over the tiled dims (contract dims pinned inner), minimizing modeled
-    transfer time with (traffic, DMA count) as the tie-break.
+    runtime with (traffic, DMA count) as the tie-break — compute time is
+    order-invariant, so in the compute-bound regime the order with the
+    fewest bytes wins.
     """
     target = target if target is not None else hwlib.default_target()
     counts = {d: n_tiles(cons[d].size, tiles[d]) for d in tiles}
@@ -168,6 +203,13 @@ def evaluate(
             time_s += b * w_bytes[t.name] + fetches * w_dma[t.name]
         return time_s, tot, dma, per, fetches_per
 
+    # FLOPs at the *constraint* sizes, not group.total_flops(): under
+    # sharded_sizes the solver prices the per-shard problem, and the
+    # compute term must cover the same per-shard work the transfer term
+    # does or sharded plans would look spuriously compute-bound.
+    flops = sum(op.flops(full_sizes) for op in group.ops)
+    compute_s = target.compute_time_s(flops)
+
     if order is None:
         best = None
         # contract dims innermost (any relative order); permute free dims.
@@ -175,10 +217,10 @@ def evaluate(
             for cperm in itertools.permutations(contract) if contract else [()]:
                 ordr = list(perm) + list(cperm)
                 time_s, tot, dma, per, fper = traffic_for(ordr)
-                key = (time_s, tot, dma)
+                key = (hwlib.modeled_runtime(compute_s, time_s), tot, dma)
                 if best is None or key < best[0]:
-                    best = (key, ordr, per, fper)
-        (time_s, tot, dma), ordr, per, fper = best
+                    best = (key, time_s, ordr, per, fper)
+        _, time_s, ordr, per, fper = best
     else:
         ordr = list(order)
         time_s, tot, dma, per, fper = traffic_for(ordr)
@@ -189,18 +231,23 @@ def evaluate(
         lname = homes[n].name
         lvl_bytes[lname] = lvl_bytes.get(lname, 0) + b
         lvl_dma[lname] = lvl_dma.get(lname, 0) + fper[n]
+    tot = sum(lvl_bytes.values())
+    dma = sum(lvl_dma.values())
 
     return CostReport(
         traffic_bytes=tot,
         dma_transfers=dma,
-        vmem_bytes=vmem_usage(group, tiles, cons, double_buffer=double_buffer),
+        vmem_bytes=vmem_usage(group, tiles, cons,
+                              buffer_depth=target.fast.buffer_depth),
         grid=tuple((d, counts[d]) for d in ordr),
         per_tensor_traffic=per,
         macs=group.total_macs(),
-        # Target.transfer_time is the canonical objective formula; the
-        # per-tensor weights inside traffic_for are its factored-out form
-        # used only to rank grid orders cheaply.
+        # Target.transfer_time / compute_time_s are the canonical
+        # formulas; the per-tensor weights inside traffic_for are their
+        # factored-out form used only to rank grid orders cheaply.
         transfer_time_s=target.transfer_time(lvl_bytes, lvl_dma),
+        compute_time_s=compute_s,
+        flops=flops,
         per_level_traffic=lvl_bytes,
         per_level_transfers=lvl_dma,
     )

@@ -87,6 +87,16 @@ class OpGraph:
     def dim_map(self) -> dict[str, Dim]:
         return {d.name: d for d in self.dims}
 
+    def total_flops(self) -> int:
+        """Modeled FLOPs of the whole chain, multiplicity included:
+        Σ_i repeats[i] · ops[i].flops.  Partition-invariant — every
+        partition of this graph runs exactly this much arithmetic, so
+        chains only differ in how much of it each segment's transfer
+        time hides."""
+        sizes = {d.name: d.size for d in self.dims}
+        return sum(r * op.flops(sizes)
+                   for r, op in zip(self.repeats, self.ops))
+
     def repeat(self, lo: int, hi: int) -> int:
         """Uniform multiplicity of segment ``ops[lo:hi]``."""
         reps = set(self.repeats[lo:hi])

@@ -151,6 +151,19 @@ class OpNode:
     def tensors(self) -> tuple[TensorSpec, ...]:
         return self.inputs + (self.output,)
 
+    def flops(self, sizes: Mapping[str, int]) -> int:
+        """Modeled FLOPs of this op at the given full dim sizes:
+        output elements × contraction elements × ``flops_per_macs``
+        (2 for a GEMM's multiply-accumulate, 1 for elementwise maps).
+        This is the per-op compute term the planner's roofline objective
+        and ``repro.roofline`` both price through ``Target.flops``."""
+        n = self.flops_per_macs
+        for d in self.output.dims:
+            n *= sizes[d]
+        for d in self.contract_dims():
+            n *= sizes[d]
+        return n
+
 
 @dataclasses.dataclass
 class FusionGroup:
@@ -209,6 +222,15 @@ class FusionGroup:
                 n *= sizes[d]
             total += n
         return total
+
+    def total_flops(self) -> int:
+        """Modeled FLOPs of the whole group: Σ_op ``op.flops`` — GEMMs at
+        2 FLOPs/MAC, elementwise ops at 1 FLOP/element.  Partition-
+        invariant over a chain (fusion never changes the arithmetic), so
+        the DP's compute term differs between partitions only through
+        each segment's max() against its own transfer time."""
+        sizes = self.dim_sizes()
+        return sum(op.flops(sizes) for op in self.ops)
 
 
 # ---------------------------------------------------------------------------

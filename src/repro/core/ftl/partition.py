@@ -6,7 +6,7 @@ subsumes both: given an :class:`~repro.core.ftl.graph.OpGraph`, it
 enumerates every *contiguous partition* of the chain (LoopTree-style), has
 the branch-and-bound tile solver price each candidate segment on the
 planning :class:`~repro.core.hw.Target`, and runs a dynamic program over
-cut points to pick the globally transfer-time-minimal schedule.
+cut points to pick the globally runtime-minimal schedule.
 
 For an ``n``-op chain there are ``2^(n-1)`` partitions but only
 ``n·(n+1)/2`` distinct segments, so the DP solves each segment once and
@@ -16,9 +16,13 @@ composes:
 
 Segments that violate a barrier (head-split reshape, repeat change) or
 whose tiling problem is infeasible on the target are skipped.  The cost
-of a segment is its solved modeled transfer time (per-level bytes/bw +
-transfers·dma_setup) times its multiplicity (per-head segments run once
-per head), with (traffic, DMA count, segment count) as the tie-break.
+of a segment is its solved modeled *roofline runtime* —
+``max(compute_time, transfer_time)``, compute from ``Target.flops``,
+transfer per-level bytes/bw + transfers·dma_setup — times its
+multiplicity (per-head segments run once per head), with (traffic, DMA
+count, segment count) as the tie-break.  The tie-break is load-bearing:
+fusing a compute-bound segment buys no runtime, so the DP only keeps a
+fusion there when it also does not cost bytes.
 
 ``plan_fixed`` prices one specific partition — the hook the benchmarks
 use to reproduce the paper's fused-vs-unfused table regardless of which
@@ -63,6 +67,19 @@ class Segment:
         return self.plan.transfer_time_s * self.repeat
 
     @property
+    def compute_time_s(self) -> float:
+        return self.plan.compute_time_s * self.repeat
+
+    @property
+    def modeled_runtime_s(self) -> float:
+        """max(compute, transfer) per run, times the multiplicity."""
+        return self.plan.modeled_runtime_s * self.repeat
+
+    @property
+    def compute_bound(self) -> bool:
+        return self.plan.report.compute_bound
+
+    @property
     def per_level_traffic(self) -> dict[str, int]:
         return {name: b * self.repeat
                 for name, b in self.plan.per_level_traffic.items()}
@@ -94,6 +111,21 @@ class ChainPlan:
     @property
     def transfer_time_s(self) -> float:
         return sum(s.transfer_time_s for s in self.segments)
+
+    @property
+    def compute_time_s(self) -> float:
+        return sum(s.compute_time_s for s in self.segments)
+
+    @property
+    def modeled_runtime_s(self) -> float:
+        """The DP's objective: Σ_segment max(compute, transfer) — segments
+        execute sequentially, each overlapping its own DMA."""
+        return sum(s.modeled_runtime_s for s in self.segments)
+
+    @property
+    def compute_bound(self) -> bool:
+        """True when compute dominates every segment of the plan."""
+        return all(s.compute_bound for s in self.segments)
 
     @property
     def per_level_traffic(self) -> dict[str, int]:
@@ -139,8 +171,10 @@ class ChainPlan:
             f"({len(self.segments)} segment(s), cuts at {self.cuts()})",
             f"  traffic : {self.traffic_bytes / MB:.2f} MiB over "
             f"{self.dma_transfers} DMA transfers ({per_level})",
-            f"  time    : {1e3 * self.transfer_time_s:.3f} ms modeled "
-            f"transfer",
+            f"  time    : {1e3 * self.modeled_runtime_s:.3f} ms modeled "
+            f"runtime (compute {1e3 * self.compute_time_s:.3f} ms, "
+            f"transfer {1e3 * self.transfer_time_s:.3f} ms; "
+            f"{'compute' if self.compute_bound else 'transfer'}-bound)",
             f"  {self.target.fast.name:7s} : "
             f"{self.vmem_bytes / MB:.2f} MiB peak / "
             f"{self.vmem_budget / MB:.2f} MiB budget",
@@ -189,8 +223,16 @@ def _plan_chain_cached(
                 continue
             seg[(lo, hi)] = _solve_segment(graph, lo, hi, target, sharded)
 
-    # DP over cut points; key = (time, traffic, dma, n_segments) so the
-    # objective matches the solver's and ties resolve deterministically.
+    # DP over cut points; key = (runtime, traffic, dma, n_segments) so
+    # the objective matches the solver's and ties resolve
+    # deterministically — in particular an all-compute-bound chain ties
+    # on runtime and the partition moving the fewest bytes wins.  The
+    # runtime component is compared through hw.round_time so partitions
+    # of mathematically equal runtime (Σ flops_i/F vs (Σ flops_i)/F)
+    # actually reach the tie-breaks instead of being split by float ulps.
+    def ckey(k: tuple) -> tuple:
+        return (hwlib.round_time(k[0]),) + k[1:]
+
     best: list[tuple[tuple, tuple[Segment, ...]] | None]
     best = [None] * (n + 1)
     best[0] = ((0.0, 0, 0, 0), ())
@@ -201,9 +243,9 @@ def _plan_chain_cached(
             if prev is None or s is None:
                 continue
             (pt, ptr, pd, pn), psegs = prev
-            key = (pt + s.transfer_time_s, ptr + s.traffic_bytes,
+            key = (pt + s.modeled_runtime_s, ptr + s.traffic_bytes,
                    pd + s.dma_transfers, pn + 1)
-            if best[hi] is None or key < best[hi][0]:
+            if best[hi] is None or ckey(key) < ckey(best[hi][0]):
                 best[hi] = (key, psegs + (s,))
     if best[n] is None:
         raise InfeasibleError(
@@ -220,8 +262,10 @@ def plan_chain(
     target: hwlib.Target | None = None,
     sharded_sizes: Mapping[str, int] | None = None,
 ) -> ChainPlan:
-    """Globally transfer-time-minimal fusion partition of ``graph`` on
-    ``target`` (None → the default target)."""
+    """Globally runtime-minimal fusion partition of ``graph`` on
+    ``target`` (None → the default target): minimizes
+    Σ_segment max(compute_time, transfer_time) with (traffic, DMA count,
+    segment count) tie-breaks."""
     target = target if target is not None else hwlib.default_target()
     return _plan_chain_cached(graph, target, _freeze(sharded_sizes))
 

@@ -75,6 +75,19 @@ class TilePlan:
         return self.report.transfer_time_s
 
     @property
+    def compute_time_s(self) -> float:
+        return self.report.compute_time_s
+
+    @property
+    def modeled_runtime_s(self) -> float:
+        """The solver's objective: max(compute, transfer)."""
+        return self.report.modeled_runtime_s
+
+    @property
+    def compute_bound(self) -> bool:
+        return self.report.compute_bound
+
+    @property
     def per_level_traffic(self) -> dict[str, int]:
         return self.report.per_level_traffic
 
@@ -104,8 +117,10 @@ class TilePlan:
             f"{self.vmem_budget/2**20:.2f} MiB budget",
             f"  traffic : {self.traffic_bytes/2**20:.2f} MiB over "
             f"{self.dma_transfers} DMA transfers ({per_level})",
-            f"  time    : {1e3 * self.transfer_time_s:.3f} ms modeled "
-            f"transfer",
+            f"  time    : {1e3 * self.modeled_runtime_s:.3f} ms modeled "
+            f"runtime (compute {1e3 * self.compute_time_s:.3f} ms, "
+            f"transfer {1e3 * self.transfer_time_s:.3f} ms; "
+            f"{'compute' if self.compute_bound else 'transfer'}-bound)",
             f"  AI      : {self.report.arithmetic_intensity:.1f} FLOP/B",
         ]
         return "\n".join(lines)

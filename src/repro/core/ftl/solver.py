@@ -1,17 +1,22 @@
 """FTL tile-size solver (paper step 4).
 
 Exact branch-and-bound over the aligned-divisor lattice of every dim
-variable in a (possibly fused) group, minimizing the *modeled transfer
-time* of the cost model on the planning :class:`~repro.core.hw.Target`
-(bytes/bw + transfers·dma_setup, per backing level) subject to the fast
-level's capacity constraint.
+variable in a (possibly fused) group, minimizing the *modeled roofline
+runtime* of the cost model on the planning :class:`~repro.core.hw.Target`
+— ``max(compute_time, transfer_time)`` with (traffic, DMA count, grid
+steps) as tie-breaks — subject to the fast level's capacity constraint
+at its pipeline ``buffer_depth``.
 
 Pruning relies on two monotonicities:
   * fast-memory footprint grows with tile sizes -> feasibility prune from
     below,
-  * per-tensor traffic AND DMA count shrink with tile sizes — and the
-    per-tensor level weights are tile-independent — so the modeled time
-    with the remaining dims at full size is a valid lower bound.
+  * per-tensor traffic AND DMA count shrink with tile sizes — the
+    per-tensor level weights are tile-independent and the compute term is
+    tile-invariant — so the full cost key with the remaining dims at full
+    size is a component-wise (hence lexicographic) lower bound over the
+    subtree.  Bounding the whole key (not just the time term) keeps the
+    prune biting in the compute-bound regime, where every assignment ties
+    on runtime and the search would otherwise degenerate to exhaustive.
 
 Groups have <= ~8 dims with <= 14 candidates each; with the two prunes the
 search visits a few thousand nodes in practice (tested up to production
@@ -48,12 +53,12 @@ def solve(
     target: hwlib.Target | None = None,
     sharded_sizes: Mapping[str, int] | None = None,
     whole_dims: frozenset[str] = frozenset(),
-    double_buffer: bool = True,
 ) -> TilePlan:
     """Plan tiling for ``group`` on ``target`` (None → the default target);
     returns the optimal :class:`TilePlan`."""
     target = target if target is not None else hwlib.default_target()
     budget = target.fast_capacity
+    depth = target.fast.buffer_depth
     group.validate()
     cons = build_dim_constraints(
         group, sharded_sizes=sharded_sizes, whole_dims=whole_dims
@@ -67,14 +72,13 @@ def solve(
     state = _SearchState()
 
     def leaf(tiles: dict[str, int]) -> None:
-        rep = evaluate(group, tiles, cons, target=target,
-                       double_buffer=double_buffer)
+        rep = evaluate(group, tiles, cons, target=target)
         if rep.vmem_bytes > budget:
             return
         steps = 1
         for _, c in rep.grid:
             steps *= c
-        key = (rep.transfer_time_s, rep.traffic_bytes, rep.dma_transfers,
+        key = (rep.modeled_runtime_s, rep.traffic_bytes, rep.dma_transfers,
                steps)
         if state.best_key is None or key < state.best_key:
             state.best_key = key
@@ -94,7 +98,7 @@ def solve(
             probe = dict(tiles)
             for j in range(i + 1, len(names)):
                 probe[names[j]] = cons[names[j]].candidates[0]
-            if vmem_usage(group, probe, cons, double_buffer=double_buffer) > budget:
+            if vmem_usage(group, probe, cons, buffer_depth=depth) > budget:
                 # candidates ascend; larger c only makes it worse.
                 del tiles[name]
                 break
@@ -103,13 +107,16 @@ def solve(
                 opt = dict(tiles)
                 for j in range(i + 1, len(names)):
                     opt[names[j]] = cons[names[j]].size
-                rep = evaluate(group, opt, cons, target=target,
-                               double_buffer=double_buffer)
-                # every leaf below this node costs at least the full-size
-                # time (traffic and DMA count both shrink as tiles grow),
-                # so a strictly worse optimistic time cannot improve on
-                # the incumbent.
-                if rep.transfer_time_s > state.best_key[0]:
+                rep = evaluate(group, opt, cons, target=target)
+                # runtime, traffic and DMA count all shrink (or stay) as
+                # tiles grow and steps >= 1, so the optimistic full-size
+                # key bounds every leaf's key from below component-wise —
+                # hence lexicographically.  A subtree whose bound cannot
+                # strictly beat the incumbent is dead (ties keep the
+                # earlier incumbent anyway).
+                opt_key = (rep.modeled_runtime_s, rep.traffic_bytes,
+                           rep.dma_transfers, 1)
+                if opt_key >= state.best_key:
                     continue
             dfs(i + 1, tiles)
         tiles.pop(name, None)

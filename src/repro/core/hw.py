@@ -13,8 +13,10 @@ plus a peak-FLOP/s figure:
 
 * ``levels[0]`` is the software-managed fast memory the planner tiles for
   (VMEM on TPU, L1 TCDM on Siracusa).  Its ``capacity_bytes`` is the tile
-  budget; its bandwidth/DMA fields describe the core↔fast path and are
-  not used by the boundary cost model.
+  budget and its ``buffer_depth`` the pipeline multiplier every streamed
+  tile is charged at (1 for a cache-backed level, 2 for DMA
+  double-buffering); its bandwidth/DMA fields describe the core↔fast
+  path and are not used by the boundary cost model.
 * ``levels[1:]`` are the backing tiers, shallow→deep.  Each level's
   ``bw_bytes_per_s`` / ``dma_setup_s`` describe the DMA path between that
   level and the fast memory.  The cost model assigns every streamed
@@ -49,18 +51,32 @@ class MemoryLevel:
     For backing levels (``Target.levels[1:]``), ``bw_bytes_per_s`` and
     ``dma_setup_s`` describe the DMA path between this level and the fast
     level — the boundary the planner's traffic crosses.
+
+    ``buffer_depth`` is the number of in-flight tile buffers a streamed
+    tensor occupies when this level is the planner's *fast* memory: 1 for
+    a hardware-cache-backed level (the cache prefetches; no software
+    staging copies), 2 for classic DMA double-buffering (VMEM, L1 TCDM),
+    3 for deeper prefetch pipelines.  The cost model charges it per
+    streamed tensor instead of a hard-coded ×2, so the solver trades
+    pipeline depth against tile size per hierarchy.
     """
 
     name: str
     capacity_bytes: int
     bw_bytes_per_s: float
     dma_setup_s: float = 0.0
+    buffer_depth: int = 2
 
     def __post_init__(self):
         if self.capacity_bytes <= 0:
             raise ValueError(f"level {self.name}: capacity must be positive")
         if self.bw_bytes_per_s <= 0:
             raise ValueError(f"level {self.name}: bandwidth must be positive")
+        if self.buffer_depth < 1:
+            raise ValueError(
+                f"level {self.name}: buffer_depth must be >= 1, got "
+                f"{self.buffer_depth}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +146,25 @@ class Target:
             levels=(fast,) + kept + (deep,)
         )
 
+    def with_buffer_depth(self, depth: int) -> "Target":
+        """This target with the fast level's pipeline depth replaced —
+        the hook tests/benchmarks use to sweep staging depth.  A changed
+        depth produces a distinct (differently named, differently
+        hashed) target, so plan caches keyed on the target can never
+        serve a plan made for a different depth; the current depth
+        returns ``self`` (no duplicate cache entries for the identical
+        machine), and re-sweeping replaces a previous ``@depthN`` suffix
+        instead of stacking another."""
+        depth = int(depth)
+        if depth == self.fast.buffer_depth:
+            return self
+        fast = dataclasses.replace(self.fast, buffer_depth=depth)
+        base = self.name.split("@depth")[0]
+        return dataclasses.replace(
+            self, name=f"{base}@depth{depth}",
+            levels=(fast,) + self.backing
+        )
+
     # ------------------------------------------------------------------
     def assign_homes(
         self, footprints: Mapping[str, int]
@@ -168,6 +203,13 @@ class Target:
             t += n * by_name[name].dma_setup_s
         return t
 
+    def compute_time_s(self, flops: float) -> float:
+        """Modeled compute time of ``flops`` at this target's peak rate
+        (:func:`compute_time` — shared with the roofline's HW view, so
+        the planner and the roofline can never disagree about how long
+        an op's arithmetic takes on the same machine)."""
+        return compute_time(flops, self.flops)
+
     # ------------------------------------------------------------------
     def describe(self) -> str:
         parts = [
@@ -177,6 +219,39 @@ class Target:
         ]
         return f"{self.name}: " + " <- ".join(parts) + \
             f", {self.flops / 1e12:g} TFLOP/s"
+
+
+def compute_time(flops: float, peak_flops: float) -> float:
+    """The repo's one compute-time formula: ``flops / peak rate``.
+    ``Target.compute_time_s`` (the FTL planner) and
+    ``repro.roofline.analysis.HW.compute_time_s`` both delegate here, so
+    a change to the compute model lands on both consumers at once."""
+    return flops / peak_flops
+
+
+def modeled_runtime(compute_s: float, transfer_s: float) -> float:
+    """The repo's one overlap rule: double-buffered DMA hides behind
+    compute (and vice versa), so a segment's modeled runtime is
+    ``max(compute_time, transfer_time)``.  The FTL solver/partition-DP
+    objective, the roofline bound and the benchmark runtime models all
+    call this instead of restating the max()."""
+    return max(compute_s, transfer_s)
+
+
+def round_time(t: float) -> float:
+    """Canonicalize a modeled time for *objective comparisons*: round to
+    12 significant digits.
+
+    Partition runtimes that are mathematically equal can differ by a
+    float ulp (an all-compute-bound chain prices ``Σ_i flops_i / F``
+    against ``(Σ_i flops_i) / F``); comparing raw floats would then break
+    such ties by rounding noise instead of falling through to the
+    deterministic traffic/DMA tie-breaks.  12 significant digits is far
+    below any modeling fidelity and far above accumulated double
+    rounding error for the ≤ dozens of segments a chain has."""
+    if t == 0.0:
+        return 0.0
+    return float(f"{t:.12g}")
 
 
 def _fmt_bytes(n: int) -> str:
@@ -194,12 +269,13 @@ def _fmt_bytes(n: int) -> str:
 
 # TPU v5e class (task-specified constants).  The fast level is the 96 MiB
 # the planner may claim — the physical 128 MiB VMEM minus the headroom the
-# Pallas pipeline machinery / semaphores need.  ICI-reachable remote HBM
-# plays the deep-tier role for the roofline's collective term.
+# Pallas pipeline machinery / semaphores need.  VMEM is DMA-fed: the
+# Pallas pipeline double-buffers every streamed tile.  ICI-reachable
+# remote HBM plays the deep-tier role for the roofline's collective term.
 TPU_V5E = Target(
     name="tpu_v5e",
     levels=(
-        MemoryLevel("vmem", 96 * MB, 2.0e13),
+        MemoryLevel("vmem", 96 * MB, 2.0e13, buffer_depth=2),
         MemoryLevel("hbm", int(16e9), 819e9, dma_setup_s=1e-6),
         MemoryLevel("ici", 1 << 50, 50e9, dma_setup_s=5e-6),
     ),
@@ -208,25 +284,27 @@ TPU_V5E = Target(
 
 # Cache-blocked x86 core: the "software-managed" fast level is the slice
 # of private L2 a blocked kernel keeps hot; hardware prefetch makes the
-# per-transfer setup effectively zero.
+# per-transfer setup effectively zero and the cache itself stages the
+# incoming lines — no software double-buffer copies (buffer_depth=1).
 CPU_CACHE = Target(
     name="cpu_cache",
     levels=(
-        MemoryLevel("l2", 1 * MB, 150e9),
-        MemoryLevel("llc", 32 * MB, 80e9),
-        MemoryLevel("dram", 64 * GB, 25e9),
+        MemoryLevel("l2", 1 * MB, 150e9, buffer_depth=1),
+        MemoryLevel("llc", 32 * MB, 80e9, buffer_depth=1),
+        MemoryLevel("dram", 64 * GB, 25e9, buffer_depth=1),
     ),
     flops=1e12,
 )
 
 # Siracusa-like RV32 cluster (the paper's platform): 256 KiB L1 TCDM fed
-# by DMA from 2 MiB on-chip L2, off-chip L3 behind a HyperBus-class link.
-# Constants match benchmarks/hw_profiles.py (order-of-magnitude estimates
-# from the Siracusa/PULP literature).
+# by DMA from 2 MiB on-chip L2 (double-buffered, the paper's pipeline),
+# off-chip L3 behind a HyperBus-class link.  Constants match
+# benchmarks/hw_profiles.py (order-of-magnitude estimates from the
+# Siracusa/PULP literature).
 RV32_L1_L2 = Target(
     name="rv32_l1_l2",
     levels=(
-        MemoryLevel("l1", 256 * KB, 8e9),
+        MemoryLevel("l1", 256 * KB, 8e9, buffer_depth=2),
         MemoryLevel("l2", 2 * MB, 2.0e9, dma_setup_s=2e-6),
         MemoryLevel("l3", 512 * MB, 0.35e9, dma_setup_s=2e-6),
     ),

@@ -15,7 +15,9 @@ Two entry points:
 * ``quantize``/``dequantize`` + ``ef_compress`` — pure functions usable
   inside any step (the error-feedback state lives in the train state).
 * ``compressed_psum`` — shard_map building block doing the actual int8
-  ``lax.psum`` over a named axis, for explicit-collective steps.
+  ``lax.psum`` over a named axis, for explicit-collective steps.  Wrap
+  it with ``repro.distributed.shard_map`` (the version shim — the
+  pinned jax 0.4.37 has no public ``jax.shard_map``).
 """
 from __future__ import annotations
 
@@ -69,7 +71,8 @@ def init_error(params: Params) -> Params:
 
 
 def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
-    """int8 all-reduce over ``axis_name`` (use inside shard_map).
+    """int8 all-reduce over ``axis_name`` (use inside
+    ``repro.distributed.shard_map``).
 
     Quantizes locally, sums int32 (no overflow up to ~2^24 shards), then
     averages the per-shard dequantized values.  Scales are all-gathered

@@ -46,6 +46,7 @@ from repro.optim import OptConfig                      # noqa: E402
 from repro.roofline import model_flops, roofline  # noqa: E402
 from repro.roofline.analysis import HW                 # noqa: E402
 from repro.roofline.hlo_cost import analyze as hlo_analyze  # noqa: E402
+from repro.roofline.hlo_cost import xla_cost_analysis  # noqa: E402
 from repro.train import steps as S                     # noqa: E402
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__),
@@ -154,7 +155,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    xla_cost = compiled.cost_analysis() or {}
+    xla_cost = xla_cost_analysis(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     # trip-count-aware cost over the compiled HLO (roofline/hlo_cost.py);

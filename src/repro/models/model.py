@@ -228,7 +228,10 @@ def _block_plan(cfg, m: int, dtype: str, target=None):
     (``registry.plan_block`` additionally caches per platform).  The
     planning target is resolved *before* the cache lookup so changing the
     default target (hw.set_default_target / FTL_TARGET) can never serve a
-    plan made for a different hierarchy.  None — and the hand-sequenced
+    plan made for a different hierarchy — the Target hashes over its
+    full level description, so editing any level field (capacity,
+    bandwidth, ``buffer_depth``) is a new cache key (regression-pinned
+    in tests/test_objective.py).  None — and the hand-sequenced
     path — when there is nothing to plan: ``ftl_mode='off'`` is the full
     escape hatch (run_block would pin the baseline executors anyway, so
     skipping the solver at trace time gives the identical compute graph

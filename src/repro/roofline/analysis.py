@@ -61,6 +61,14 @@ class HW:
             target_name=t.name,
         )
 
+    def compute_time_s(self, flops: float) -> float:
+        """The same compute-time formula the FTL planner prices with:
+        ``hw.compute_time`` — the roofline derives both its peak rate
+        (``from_target``) and the formula from the one Target, so the
+        planner and the roofline cannot disagree about an op's compute
+        time (pinned by tests/test_objective.py)."""
+        return hw_targets.compute_time(flops, self.peak_flops)
+
 
 DEFAULT_HW = HW.from_target(hw_targets.TPU_V5E)
 
@@ -229,7 +237,7 @@ class RooflineReport:
 
     @property
     def t_compute(self) -> float:
-        return self.flops_per_chip / self.hw.peak_flops
+        return self.hw.compute_time_s(self.flops_per_chip)
 
     @property
     def t_memory(self) -> float:
@@ -247,8 +255,11 @@ class RooflineReport:
 
     @property
     def t_bound(self) -> float:
-        """Roofline step time: overlapped terms → max()."""
-        return max(self.t_compute, self.t_memory, self.t_collective)
+        """Roofline step time: overlapped terms → max() — the same
+        overlap rule the FTL objective uses (``hw.modeled_runtime``),
+        with the collective term folded in."""
+        return max(hw_targets.modeled_runtime(self.t_compute, self.t_memory),
+                   self.t_collective)
 
     @property
     def useful_flops_ratio(self) -> float:

@@ -18,6 +18,17 @@ MB = 1 << 20
 def T(budget: int) -> hw.Target:
     return hw.TPU_V5E.with_fast_capacity(budget)
 
+
+def _key(chain):
+    """The partition DP's objective key: modeled runtime with
+    (traffic, DMA, segment count) tie-breaks.  The runtime component
+    goes through the DP's own tie canonicalization (hw.round_time) —
+    compute-bound partitions tie up to a float ulp, and comparing raw
+    floats would make these assertions ulp-fragile."""
+    return (hw.round_time(chain.modeled_runtime_s), chain.traffic_bytes,
+            chain.dma_transfers, len(chain.segments))
+
+
 # Paper ViT-Base MLP dims (Fig. 3 benchmark).
 VIT_M, VIT_D, VIT_F = 3072, 768, 3072
 
@@ -40,7 +51,10 @@ class TestPartitionVsAuto:
             0.01 * out.chosen_traffic
 
     def test_dp_never_beats_itself_inconsistently(self):
-        """DP traffic <= every canonical schedule it subsumes."""
+        """DP objective key <= every canonical schedule it subsumes:
+        modeled runtime first, then bytes — so on runtime ties (the
+        compute-bound regime) the DP's choice still moves no more
+        traffic than any canonical partition."""
         g = graph.mlp_graph(m=4096, d_model=1024, d_ff=4096)
         chain = partition.plan_chain(g, target=T(8 * MB))
         for cuts in [(), (g.n_ops - 1,), partition.all_cuts(g)]:
@@ -48,7 +62,9 @@ class TestPartitionVsAuto:
                 fixed = partition.plan_fixed(g, cuts, target=T(8 * MB))
             except InfeasibleError:
                 continue
-            assert chain.traffic_bytes <= fixed.traffic_bytes
+            assert _key(chain) <= _key(fixed)
+            assert chain.modeled_runtime_s <= \
+                fixed.modeled_runtime_s * (1 + 1e-9)
 
     def test_gated_mlp_partition(self):
         """qwen2-72b-class dims where the seed's planner picked partial:
@@ -61,18 +77,24 @@ class TestPartitionVsAuto:
         fused = partition.plan_fixed(g, (), target=hw.TPU_V5E)
         assert chain.traffic_bytes < unf.traffic_bytes
         assert chain.traffic_bytes < fused.traffic_bytes
+        assert chain.modeled_runtime_s <= unf.modeled_runtime_s * (1 + 1e-9)
+        assert chain.modeled_runtime_s <= \
+            fused.modeled_runtime_s * (1 + 1e-9)
         assert chain.schedule == "partial"
 
     def test_gemm_chain_4op_never_exceeds_unfused(self):
         """Satellite pin: a 4-GEMM chain's DP schedule must never exceed
-        the all-unfused traffic, at any budget."""
+        the all-unfused runtime — nor, on runtime ties, its traffic —
+        at any budget."""
         for budget in (2 * MB, 8 * MB, 32 * MB, 96 * MB):
             g = graph.gemm_chain_graph(
                 m=2048, dims_kn=[512, 1024, 512, 1024])
             chain = partition.plan_chain(g, target=T(budget))
             unf = partition.plan_fixed(g, partition.all_cuts(g),
                                        target=T(budget))
-            assert chain.traffic_bytes <= unf.traffic_bytes, budget
+            assert _key(chain) <= _key(unf), budget
+            assert chain.modeled_runtime_s <= \
+                unf.modeled_runtime_s * (1 + 1e-9), budget
 
     def test_plan_attention_unchanged(self):
         plan = ftl.plan_attention(q_len=4096, kv_len=4096, head_dim=128)

@@ -1,0 +1,377 @@
+"""Roofline-objective property suite (the PR-4 tentpole's harness).
+
+Pins the planner's ``max(compute_time, transfer_time)`` objective to the
+roofline model instead of trusting it:
+
+* planner and roofline compute identical compute-time for the same
+  (op, target) — both route through ``hw.compute_time``;
+* hypothesis properties: modeled runtime is monotone non-increasing in
+  ``Target.flops`` and in fast-level capacity, and ``max(compute, dma)``
+  dominates each of its terms — across all three presets;
+* compute-bound chains (tiny dims against a huge FLOP/s deficit) yield
+  the unfused partition when fusion costs bytes: runtime ties, and the
+  traffic tie-break refuses to pay the joint-tiling penalty;
+* the paper-qualitative pin: the ViT-MLP op stays fusion-favorable on
+  the Siracusa-like ``rv32_l1_l2`` preset under the new objective;
+* per-level buffer depth: depth 1 on the cache-backed ``cpu_cache``
+  reproduces the depth-2 plans where they were already feasible, a
+  depth-3 VMEM level strictly shrinks the max feasible tile size, and
+  depth changes invalidate the model-level plan cache.
+"""
+import dataclasses
+
+import pytest
+
+from repro import configs
+from repro.core import ftl, hw
+from repro.core.ftl import graph, partition
+from repro.core.ftl.cost import vmem_usage
+from repro.core.ftl.solver import InfeasibleError
+from repro.roofline.analysis import HW
+
+KB, MB = 1 << 10, 1 << 20
+
+PRESETS = list(hw.presets())
+PRESET_IDS = [t.name for t in PRESETS]
+
+
+def _flat(budget: int, flops: float = 1e12) -> hw.Target:
+    """Single-backing-level target with zero DMA setup: transfer time is
+    traffic-proportional, so capacity monotonicity is exact."""
+    return hw.Target(
+        name=f"flat@{budget}",
+        levels=(hw.MemoryLevel("fast", budget, 1e12),
+                hw.MemoryLevel("back", 1 << 50, 100e9)),
+        flops=flops,
+    )
+
+
+# ---------------------------------------------------------------------------
+# planner and roofline price compute from the SAME Target
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("target", PRESETS, ids=PRESET_IDS)
+def test_planner_and_roofline_agree_on_compute_time(target):
+    """For the same (op, target) the FTL cost model and the roofline's HW
+    view must report the *identical* compute time — both delegate to
+    ``hw.compute_time(flops, Target.flops)``, and this test keeps them
+    from ever diverging again."""
+    g = graph.mlp_graph(m=512, d_model=256, d_ff=1024, dtype="int8")
+    group = g.group(0, g.n_ops)
+    try:
+        plan = ftl.solve(group, target=target)
+    except InfeasibleError:
+        pytest.skip("op infeasible on this preset")
+    flops = group.total_flops()
+    assert flops == g.total_flops()
+    roof = HW.from_target(target)
+    assert plan.report.flops == flops
+    assert plan.report.compute_time_s == target.compute_time_s(flops)
+    assert plan.report.compute_time_s == roof.compute_time_s(flops)
+    assert roof.peak_flops == target.flops
+
+
+def test_sharded_compute_term_prices_per_shard_work():
+    """Under the sharding constraint family the solver prices the
+    per-shard problem; the compute term must cover the same per-shard
+    FLOPs the transfer term does, or every sharded plan would look
+    spuriously compute-bound (regression: evaluate once priced the full
+    unsharded chain's FLOPs)."""
+    g_full = ftl.fusion.mlp(m=4096, d_model=1024, d_ff=4096, fuse=True)
+    g_shard = ftl.fusion.mlp(m=4096, d_model=1024, d_ff=4096, fuse=True)
+    full = ftl.solve(g_full, target=hw.TPU_V5E)
+    shard = ftl.solve(g_shard, target=hw.TPU_V5E,
+                      sharded_sizes={"M": 4096 // 4, "F": 4096 // 4})
+    # per-shard work: both M and F cut 4x -> gemm FLOPs drop 16x is
+    # wrong (each gemm has only one of M/F... M in both, F in one), so
+    # just pin the exact per-op sum at the sharded sizes
+    sizes = {d: c.size for d, c in shard.constraints.items()}
+    assert shard.report.flops == sum(
+        op.flops(sizes) for op in shard.group.ops)
+    assert shard.report.flops < full.report.flops
+    assert shard.report.compute_time_s == hw.TPU_V5E.compute_time_s(
+        shard.report.flops)
+
+
+def test_per_op_flop_counts():
+    """GEMMs at 2·M·K·N FLOPs, elementwise at 1 FLOP/element; the chain
+    total is multiplicity-weighted and partition-invariant."""
+    g = graph.gemm_act_graph(m=64, k=32, n=128, dtype="int8")
+    sizes = {d.name: d.size for d in g.dims}
+    gemm_op, act_op = g.ops
+    assert gemm_op.flops(sizes) == 2 * 64 * 32 * 128
+    assert act_op.flops(sizes) == 64 * 128
+    assert g.total_flops() == 2 * 64 * 32 * 128 + 64 * 128
+    # partition-invariant: every segmentation covers the same arithmetic
+    assert (g.group(0, 1).total_flops() + g.group(1, 2).total_flops()
+            == g.group(0, 2).total_flops())
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (deterministic fallbacks when not installed)
+# ---------------------------------------------------------------------------
+
+DIMS = [128, 256, 512, 1024]
+FLOPS_LADDER = (1e6, 1e9, 1e12, 1e15)
+BUDGETS = (256 * KB, 1 * MB, 8 * MB, 96 * MB)
+
+
+def _chain_runtime(m, k, n, target):
+    g = graph.mlp_graph(m=m, d_model=k, d_ff=n, dtype="int8")
+    try:
+        return partition.plan_chain(g, target=target).modeled_runtime_s
+    except InfeasibleError:
+        return None
+
+
+def _check_monotone_in_flops(m, k, n, budget, f_lo, f_hi):
+    lo = _chain_runtime(m, k, n, _flat(budget, flops=f_lo))
+    hi = _chain_runtime(m, k, n, _flat(budget, flops=f_hi))
+    if lo is None or hi is None:
+        return
+    # same machine, faster compute: the optimum can only improve
+    # (per-assignment runtime is non-increasing in FLOP/s)
+    assert hi <= lo * (1 + 1e-9)
+
+
+def _check_monotone_in_capacity(m, k, n, flops, b_lo, b_hi):
+    lo = _chain_runtime(m, k, n, _flat(b_lo, flops=flops))
+    hi = _chain_runtime(m, k, n, _flat(b_hi, flops=flops))
+    if lo is None:
+        return
+    assert hi is not None          # feasible set only grows with capacity
+    assert hi <= lo * (1 + 1e-9)
+
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    dim = st.sampled_from(DIMS)
+    fl = st.sampled_from(FLOPS_LADDER)
+    budget = st.sampled_from(BUDGETS)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=dim, k=dim, n=dim, b=budget, f1=fl, f2=fl)
+    def test_runtime_monotone_in_flops_fuzz(m, k, n, b, f1, f2):
+        _check_monotone_in_flops(m, k, n, b, min(f1, f2), max(f1, f2))
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=dim, k=dim, n=dim, f=fl, b1=budget, b2=budget)
+    def test_runtime_monotone_in_capacity_fuzz(m, k, n, f, b1, b2):
+        _check_monotone_in_capacity(m, k, n, f, min(b1, b2), max(b1, b2))
+except ImportError:  # pragma: no cover - hypothesis optional locally
+    pass
+
+
+def test_runtime_monotone_in_flops_ladder():
+    """Deterministic sweep of the same property hypothesis fuzzes."""
+    for f_lo, f_hi in zip(FLOPS_LADDER, FLOPS_LADDER[1:]):
+        _check_monotone_in_flops(512, 256, 1024, 1 * MB, f_lo, f_hi)
+
+
+def test_runtime_monotone_in_capacity_ladder():
+    for b_lo, b_hi in zip(BUDGETS, BUDGETS[1:]):
+        _check_monotone_in_capacity(512, 256, 1024, 1e12, b_lo, b_hi)
+
+
+@pytest.mark.parametrize("target", PRESETS, ids=PRESET_IDS)
+def test_runtime_dominates_each_term_on_presets(target):
+    """max(compute, dma) >= each term, on every preset and schedule."""
+    g = graph.mlp_graph(m=512, d_model=256, d_ff=1024, dtype="int8")
+    for cuts in [(), partition.all_cuts(g), None]:
+        try:
+            chain = (partition.plan_chain(g, target=target) if cuts is None
+                     else partition.plan_fixed(g, cuts, target=target))
+        except InfeasibleError:
+            continue
+        for s in chain.segments:
+            rep = s.plan.report
+            assert rep.modeled_runtime_s >= rep.compute_time_s
+            assert rep.modeled_runtime_s >= rep.transfer_time_s
+            assert rep.modeled_runtime_s == max(rep.compute_time_s,
+                                                rep.transfer_time_s)
+            assert rep.compute_bound == (
+                rep.compute_time_s >= rep.transfer_time_s)
+        # chain-level aggregates are segment sums
+        assert chain.modeled_runtime_s == pytest.approx(
+            sum(s.modeled_runtime_s for s in chain.segments))
+        assert chain.modeled_runtime_s >= chain.compute_time_s - 1e-15
+        assert chain.modeled_runtime_s >= chain.transfer_time_s - 1e-15
+
+
+@pytest.mark.parametrize("target", PRESETS, ids=PRESET_IDS)
+def test_dp_runtime_never_exceeds_canonical_schedules(target):
+    """Feasibility/optimality across all three presets: the DP's chosen
+    runtime is <= both the fused and the all-unfused schedule's."""
+    g = graph.gemm_act_graph(m=3072, k=768, n=3072, dtype="int8")
+    chain = partition.plan_chain(g, target=target)
+    for cuts in [(), partition.all_cuts(g)]:
+        try:
+            fixed = partition.plan_fixed(g, cuts, target=target)
+        except InfeasibleError:
+            continue
+        assert chain.modeled_runtime_s <= fixed.modeled_runtime_s * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# compute-bound chains: fusion that buys no runtime must not cost bytes
+# ---------------------------------------------------------------------------
+
+def _slow_small() -> hw.Target:
+    """128 KiB fast level (joint tiling hurts: the ViT-MLP op only fits
+    fused with heavy weight revisits) against a 10^4x FLOP/s deficit
+    (1 MFLOP/s vs the ~14.5 GFLOP op): every partition is compute-bound."""
+    return hw.Target(
+        name="slow_small",
+        levels=(hw.MemoryLevel("fast", 128 * KB, 8e9),
+                hw.MemoryLevel("back", 1 << 50, 2e9, dma_setup_s=2e-6)),
+        flops=1e6,
+    )
+
+
+def test_compute_bound_chain_yields_unfused_partition():
+    """Old objective (transfer time only) vs new: on a compute-bound
+    chain where the fused segment's joint tiling moves MORE bytes than
+    layer-per-layer, the runtimes tie at the compute floor and the
+    traffic tie-break must pick the unfused partition — fusing would buy
+    zero runtime and cost real bytes."""
+    t = _slow_small()
+    g = graph.gemm_act_graph(m=3072, k=768, n=3072, dtype="int8")
+    fused = partition.plan_fixed(g, (), target=t)
+    unfused = partition.plan_fixed(g, partition.all_cuts(g), target=t)
+    # the regime the test needs: compute-bound everywhere, fusion costs
+    # bytes (joint tiling forces weight revisits in the 128 KiB fast level)
+    assert fused.compute_bound and unfused.compute_bound
+    assert fused.traffic_bytes > unfused.traffic_bytes
+    # runtimes tie at the compute floor...
+    assert fused.modeled_runtime_s == pytest.approx(
+        unfused.modeled_runtime_s, rel=1e-9)
+    # ...so the DP must refuse the fusion
+    chain = partition.plan_chain(g, target=t)
+    assert chain.schedule == "unfused"
+    # whereas with the FLOP deficit removed the transfer term decides
+    fast = dataclasses.replace(t, name="fast_flops", flops=1e18)
+    assert partition.plan_chain(g, target=fast).schedule == "unfused"
+    # (this op is transfer-unfavorable to fuse at 128 KiB either way; at
+    # a VMEM-class budget the same op fuses — the paper's regime)
+    roomy = hw.TPU_V5E.with_fast_capacity(8 * MB)
+    assert partition.plan_chain(g, target=roomy).schedule == "fused"
+
+
+def test_rv32_mlp_stays_fusion_favorable():
+    """Paper-qualitative pin under the runtime objective: on the
+    Siracusa-like preset the ViT-MLP op still fuses, and the full MLP
+    chain still beats layer-per-layer on runtime AND bytes."""
+    t = hw.get_target("rv32_l1_l2")
+    # the paper's Fig. 3 op: GEMM→GeLU fuses outright
+    g = graph.gemm_act_graph(m=3072, k=768, n=3072, dtype="int8")
+    assert partition.plan_chain(g, target=t).schedule == "fused"
+    # the full MLP chain: fusion-favorable (never layer-per-layer)
+    gm = graph.mlp_graph(m=512, d_model=256, d_ff=1024, dtype="int8")
+    chain = partition.plan_chain(gm, target=t)
+    unfused = partition.plan_fixed(gm, partition.all_cuts(gm), target=t)
+    assert chain.schedule != "unfused"
+    assert chain.modeled_runtime_s <= unfused.modeled_runtime_s * (1 + 1e-9)
+    assert chain.traffic_bytes < unfused.traffic_bytes
+
+
+# ---------------------------------------------------------------------------
+# per-level buffer depth
+# ---------------------------------------------------------------------------
+
+class TestBufferDepth:
+    def test_preset_depths(self):
+        """cpu_cache is cache-backed (no software staging copies); the
+        DMA-fed VMEM / L1 TCDM fast levels double-buffer."""
+        assert hw.CPU_CACHE.fast.buffer_depth == 1
+        assert hw.TPU_V5E.fast.buffer_depth == 2
+        assert hw.RV32_L1_L2.fast.buffer_depth == 2
+
+    def test_depth_must_be_positive(self):
+        with pytest.raises(ValueError, match="buffer_depth"):
+            hw.MemoryLevel("x", 1 * MB, 1e9, buffer_depth=0)
+
+    def test_with_buffer_depth_is_distinct_cache_key(self):
+        t3 = hw.TPU_V5E.with_buffer_depth(3)
+        assert t3.fast.buffer_depth == 3
+        assert t3 != hw.TPU_V5E
+        assert hash(t3) != hash(hw.TPU_V5E)
+
+    def test_depth1_cpu_cache_reproduces_depth2_plans_when_feasible(self):
+        """Regression: on cpu_cache (now depth 1) a problem whose depth-2
+        (the old hard-coded ×2) optimum already fit keeps the identical
+        tiles — relaxing the staging charge cannot change a plan the
+        capacity constraint never bound."""
+        legacy = hw.CPU_CACHE.with_buffer_depth(2)   # yesterday's model
+        for mk in [(256, 256, 256), (512, 256, 256)]:
+            m, k, n = mk
+            g1 = ftl.fusion.mlp(m=m, d_model=k, d_ff=n, dtype="int8",
+                                fuse=True)
+            g2 = ftl.fusion.mlp(m=m, d_model=k, d_ff=n, dtype="int8",
+                                fuse=True)
+            p1 = ftl.solve(g1, target=hw.CPU_CACHE)
+            p2 = ftl.solve(g2, target=legacy)
+            assert p2.vmem_bytes <= legacy.fast_capacity   # was feasible
+            # depth-2 optimum is unconstrained (full-size tiles) here, so
+            # relaxing the charge must reproduce it bit-for-bit
+            assert all(p2.tile(d) == p2.size(d) for d in p2.tiles), mk
+            assert p1.tiles == p2.tiles, mk
+            assert p1.traffic_bytes == p2.traffic_bytes, mk
+            assert p1.modeled_runtime_s == p2.modeled_runtime_s, mk
+
+    def test_depth1_never_worse_than_depth2(self):
+        """The depth-1 feasible set contains the depth-2 one, so the
+        solved runtime can only improve."""
+        legacy = hw.CPU_CACHE.with_buffer_depth(2)
+        g = lambda: ftl.fusion.mlp(m=2048, d_model=1024, d_ff=4096,  # noqa
+                                   fuse=True)
+        r1 = ftl.solve(g(), target=hw.CPU_CACHE).modeled_runtime_s
+        r2 = ftl.solve(g(), target=legacy).modeled_runtime_s
+        assert r1 <= r2 * (1 + 1e-9)
+
+    def test_depth3_vmem_strictly_shrinks_max_feasible_tile(self):
+        """A depth-3 VMEM pipeline charges every streamed tile 3 buffers:
+        the largest M tile that fits an 8 MiB fast level strictly drops
+        (4096 → 2048 on this op), and the full solve stays within budget
+        at the inflated charge."""
+        budget = 8 * MB
+        g = ftl.fusion.gemm_act(m=8192, k=4096, n=4096, fuse=True)
+        cons = ftl.build_dim_constraints(g)
+
+        def max_feasible_m(depth):
+            best = None
+            for c in cons["M"].candidates:
+                tiles = {d: (c if d == "M" else cons[d].candidates[0])
+                         for d in cons}
+                if vmem_usage(g, tiles, cons, buffer_depth=depth) <= budget:
+                    best = c
+            return best
+
+        assert max_feasible_m(3) < max_feasible_m(2)
+        t3 = hw.TPU_V5E.with_fast_capacity(budget).with_buffer_depth(3)
+        g3 = ftl.fusion.gemm_act(m=8192, k=4096, n=4096, fuse=True)
+        plan = ftl.solve(g3, target=t3)
+        assert plan.vmem_bytes <= budget
+        # the reported footprint already charges the ×3 pipeline
+        assert plan.vmem_bytes == vmem_usage(plan.group, plan.tiles,
+                                             plan.constraints,
+                                             buffer_depth=3)
+
+    def test_model_plan_cache_invalidated_by_depth_change(self):
+        """models/model.py keys its per-block plan cache on the resolved
+        target; a buffer-depth change is a different machine and must
+        produce a distinct plan object (never a stale ×2-era plan)."""
+        from repro.models import model as M
+        cfg = dataclasses.replace(
+            configs.get_config("llama3.2-3b").reduced(),
+            dtype="float32", remat=False, ftl_mode="auto")
+        base = M._block_plan(cfg, 32, "float32", target=hw.TPU_V5E)
+        deep = M._block_plan(cfg, 32, "float32",
+                             target=hw.TPU_V5E.with_buffer_depth(3))
+        assert base is not None and deep is not None
+        assert deep is not base
+        assert deep.target.fast.buffer_depth == 3
+        # same depth resolves back to the same cached object
+        assert M._block_plan(cfg, 32, "float32",
+                             target=hw.TPU_V5E) is base
