@@ -1,0 +1,130 @@
+"""Schedule simulation sweep: analytic roofline vs discrete-event replay
+(the ``repro.sim`` tentpole artifact + CI gate).
+
+For every ``repro.core.hw`` preset (now including the NPU-equipped
+``rv32_npu``) this lowers the paper's ViT-MLP benchmark op (GEMM→GeLU,
+int8) — fused and layer-per-layer — into the tile-level schedule IR and
+replays it through the DMA/engine simulator, reporting simulated
+runtime, the sim/analytic ratio, overlap efficiency and per-resource
+busy/stall time.  A zoo transformer block is swept the same way so the
+simulator is exercised on multi-segment chains with per-head repeats.
+
+Writes ``BENCH_schedule.json`` (uploaded by the CI bench-smoke job).
+
+**CI gates** (every preset, or the run fails):
+
+* *fused-sim*: the fused schedule's **simulated** runtime must not
+  exceed the unfused schedule's — the paper's claim re-checked on the
+  event timeline, not just the closed-form max();
+* *floor*: simulated ≥ analytic runtime (the DES only adds real
+  serialization; a sim below the roofline floor is a simulator bug).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro import sim
+from repro.core import hw
+from repro.core.ftl import graph, partition
+
+from ._smoke import smoke
+
+OUT = "BENCH_schedule.json"
+
+# paper ViT-Base MLP first half: d=768, d_ff=3072, int8
+D_MODEL, D_FF = 768, 3072
+DTYPE = "int8"
+
+
+def _m() -> int:
+    return 512 if smoke() else 3072
+
+
+def _row(chain) -> dict:
+    rep = sim.compare_plan(chain)
+    rep["n_segments"] = len(chain.segments)
+    return rep
+
+
+def target_row(target: hw.Target, m: int) -> dict:
+    g = graph.gemm_act_graph(m=m, k=D_MODEL, n=D_FF, dtype=DTYPE)
+    t0 = time.perf_counter()
+    fused = _row(partition.plan_fixed(g, (), target=target))
+    unfused = _row(partition.plan_fixed(g, partition.all_cuts(g),
+                                        target=target))
+    sim_ms = round(1e3 * (time.perf_counter() - t0), 1)
+    gate_fused = (hw.round_time(fused["sim_runtime_ms"])
+                  <= hw.round_time(unfused["sim_runtime_ms"]))
+    gate_floor = (
+        fused["sim_runtime_ms"]
+        >= fused["analytic_runtime_ms"] * (1 - 1e-9)
+        and unfused["sim_runtime_ms"]
+        >= unfused["analytic_runtime_ms"] * (1 - 1e-9))
+    return {
+        "target": target.name,
+        "engines": [{"name": e.name, "rates": dict(e.rates)}
+                    for e in target.engines],
+        "paper_op": {"m": m, "d_model": D_MODEL, "d_ff": D_FF,
+                     "dtype": DTYPE, "fused": fused, "unfused": unfused,
+                     "sim_runtime_red_%": round(
+                         100 * (1 - fused["sim_runtime_ms"]
+                                / unfused["sim_runtime_ms"]), 1)},
+        "lower_and_sim_ms": sim_ms,
+        "gate_fused_sim_ok": gate_fused,
+        "gate_floor_ok": gate_floor,
+        "gate_ok": gate_fused and gate_floor,
+    }
+
+
+def block_rows(m: int) -> list[dict]:
+    """One zoo block per preset: multi-segment chains with repeats."""
+    import dataclasses
+
+    from repro import configs
+    from repro.core.ftl import registry
+    cfg = dataclasses.replace(configs.get_config("llama3.2-3b").reduced(),
+                              dtype="float32", remat=False)
+    rows = []
+    for target in hw.presets():
+        bp = registry.plan_block(cfg, m=m, dtype="float32", target=target)
+        rows.append({"arch": cfg.name, "m": m, **sim.compare_plan(bp)})
+    return rows
+
+
+def run() -> dict:
+    m = _m()
+    return {
+        "smoke": smoke(),
+        "m": m,
+        "gate": "simulated fused runtime <= simulated unfused AND "
+                "simulated >= analytic on every preset",
+        "targets": [target_row(t, m) for t in hw.presets()],
+        "zoo_block": block_rows(32 if smoke() else 128),
+    }
+
+
+def main() -> None:
+    result = run()
+    for row in result["targets"]:
+        op = row["paper_op"]
+        print(f"{row['target']}: fused sim "
+              f"{op['fused']['sim_runtime_ms']:.3f} ms "
+              f"(x{op['fused']['sim_over_analytic']:.3f} analytic, "
+              f"overlap eff {op['fused']['overlap_efficiency']:.2f}) vs "
+              f"unfused sim {op['unfused']['sim_runtime_ms']:.3f} ms "
+              f"({op['sim_runtime_red_%']}% red), "
+              f"lower+sim {row['lower_and_sim_ms']} ms")
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {OUT}")
+    bad = [r["target"] for r in result["targets"] if not r["gate_ok"]]
+    if bad:
+        raise RuntimeError(
+            f"schedule-sim gate FAILED on {bad}: simulated fused must "
+            f"not exceed simulated unfused, and simulated runtime must "
+            f"never undercut the analytic floor")
+
+
+if __name__ == "__main__":
+    main()

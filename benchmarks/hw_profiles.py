@@ -45,7 +45,23 @@ class TwoTierHW:
         DMA-fed (double-buffered) scratchpad fast level, L2 +
         (unbounded-above) L3 backing — the same machine description the
         solver, partitioner and registry consume, so the runtime model
-        and the planner agree."""
+        and the planner agree.
+
+        The ``macs_per_s``/``ew_per_s`` split is expressed as
+        :class:`repro.core.hw.Engine`\\s (no private rate model left):
+        with ``gemm_on_accel`` the GEMM engine and the elementwise
+        cluster overlap (``compute_time_by_kind`` takes the max); on a
+        cluster-only profile one engine runs both kinds serialized."""
+        if self.gemm_on_accel:
+            engines = (
+                hwlib.Engine("npu", (("gemm", 2.0 * self.macs_per_s),)),
+                hwlib.Engine("cluster", (("*", self.ew_per_s),)),
+            )
+        else:
+            engines = (
+                hwlib.Engine("cluster", (("gemm", 2.0 * self.macs_per_s),
+                                         ("*", self.ew_per_s))),
+            )
         return hwlib.Target(
             name=self.name,
             levels=(
@@ -57,6 +73,7 @@ class TwoTierHW:
                                   dma_setup_s=self.dma_setup_s),
             ),
             flops=2.0 * self.macs_per_s,
+            engines=engines,
         )
 
 
@@ -101,18 +118,19 @@ def runtime_model_unfused(hw: TwoTierHW, *, macs: int, ew_elems: int,
     ``hw.modeled_runtime`` rule; the intermediate spills to L3 when it
     exceeds free L2 (the paper's ViT-MLP case).
 
-    This is the planner's Σ_segment max(compute, transfer) objective
-    with one refinement the single-rate Target cannot express: separate
-    MAC and elementwise engines (NPU vs cluster)."""
+    Both compute terms route through the shared per-engine model
+    (``Target.compute_time_by_kind`` over this profile's engines) — the
+    MAC/elementwise split is no longer a private refinement."""
+    t = hw.target()
     spill = intermediate_bytes > hw.l2_bytes
     # gemm writes the intermediate; ew reads+writes it
     l3_g = intermediate_bytes if spill else 0
     l3_e = 2 * intermediate_bytes if spill else 0
     t_gemm = hwlib.modeled_runtime(
-        macs / hw.macs_per_s,
+        t.compute_time_by_kind({"gemm": 2.0 * macs}),
         _dma_time(hw, gemm_traffic - l3_g, l3_g, gemm_dma))
     t_ew = hwlib.modeled_runtime(
-        ew_elems / hw.ew_per_s,
+        t.compute_time_by_kind({"elementwise": ew_elems}),
         _dma_time(hw, ew_traffic - l3_e, l3_e, ew_dma))
     return {"t_total_s": t_gemm + t_ew, "t_gemm_s": t_gemm, "t_ew_s": t_ew,
             "l3_bytes": l3_g + l3_e}
@@ -121,13 +139,11 @@ def runtime_model_unfused(hw: TwoTierHW, *, macs: int, ew_elems: int,
 def runtime_model_fused(hw: TwoTierHW, *, macs: int, ew_elems: int,
                         traffic: int, dma: int) -> dict:
     """Fused: epilogue applied on the L1 tile.  With the NPU doing GEMMs
-    the cluster's epilogue overlaps; cluster-only serializes epilogue
-    cycles into the compute term.  No intermediate, no spill — then the
-    shared ``hw.modeled_runtime`` overlap rule against the DMA time."""
-    t_ew = ew_elems / hw.ew_per_s
-    if hw.gemm_on_accel:
-        t_compute = max(macs / hw.macs_per_s, t_ew)
-    else:
-        t_compute = macs / hw.macs_per_s + t_ew
+    the cluster's epilogue overlaps (``compute_time_by_kind`` takes the
+    per-engine max); cluster-only serializes epilogue cycles onto the
+    one engine.  No intermediate, no spill — then the shared
+    ``hw.modeled_runtime`` overlap rule against the DMA time."""
+    t_compute = hw.target().compute_time_by_kind(
+        {"gemm": 2.0 * macs, "elementwise": ew_elems})
     t = hwlib.modeled_runtime(t_compute, _dma_time(hw, traffic, 0, dma))
     return {"t_total_s": t, "t_compute_s": t_compute}

@@ -1,17 +1,22 @@
-"""Explore FTL plans interactively: target sweeps, fusion decisions, and
-the sharding-constraint family.
+"""Explore FTL plans interactively: target sweeps, fusion decisions,
+the sharding-constraint family, and the tile-level schedule replay.
 
 Shows, for a chosen MLP, how the optimal schedule changes with the
 memory-hierarchy target — across the presets (tpu_v5e / cpu_cache /
-rv32_l1_l2) and across fast-level capacities of one target: the paper's
-Fig. 3 regime (fusion wins) and the small-budget regime where the
-partitioner rejects fusion (beyond-paper extension).
+rv32_l1_l2 / rv32_npu) and across fast-level capacities of one target:
+the paper's Fig. 3 regime (fusion wins) and the small-budget regime
+where the partitioner rejects fusion (beyond-paper extension).  The
+preset sweep also replays every chosen plan through the ``repro.sim``
+discrete-event simulator (sim vs analytic runtime, overlap efficiency),
+and ``--timeline`` prints the first tile steps of the replayed schedule
+event by event.
 
 Run:  PYTHONPATH=src python examples/ftl_explore.py [--m 8192] [--d 4096]
-      [--f 11008] [--target rv32_l1_l2]
+      [--f 11008] [--target rv32_npu] [--timeline]
 """
 import argparse
 
+from repro import sim
 from repro.core import hw
 from repro.core.ftl import graph, partition, registry
 
@@ -39,6 +44,9 @@ def main() -> None:
                     help="preset to sweep fast-level capacities of")
     ap.add_argument("--arch", default=None,
                     help="also show the whole-block graph plan for an arch")
+    ap.add_argument("--timeline", action="store_true",
+                    help="print the replayed event timeline of the chosen "
+                         "plan on --target")
     args = ap.parse_args()
 
     g = graph.mlp_graph(m=args.m, d_model=args.d, d_ff=args.f,
@@ -46,18 +54,22 @@ def main() -> None:
     print(f"MLP m={args.m} d_model={args.d} d_ff={args.f} "
           f"gated={args.gated}\n")
 
-    # --- preset sweep: same chain, three machines ------------------------
+    # --- preset sweep: same chain, four machines, analytic + replayed ----
     print(f"{'target':>12} {'decision':>9} {'chosen MiB':>11} "
-          f"{'unfused MiB':>12} {'runtime ms':>11} {'bound':>8}  per-level")
+          f"{'unfused MiB':>12} {'runtime ms':>11} {'sim ms':>9} "
+          f"{'eff':>5} {'bound':>8}  per-level")
     for t in hw.presets():
         chain, fused, unf = _mlp_row(g, t)
         per = ", ".join(f"{n}={b / MB:.1f}M"
                         for n, b in chain.per_level_traffic.items())
         bound = "compute" if chain.compute_bound else "transfer"
+        replay = sim.simulate_chain(sim.lower_chain(chain))
         print(f"{t.name:>12} {chain.schedule:>9} "
               f"{chain.traffic_bytes / MB:11.1f} "
               f"{unf.traffic_bytes / MB:12.1f} "
-              f"{1e3 * chain.modeled_runtime_s:11.2f} {bound:>8}  {per}")
+              f"{1e3 * chain.modeled_runtime_s:11.2f} "
+              f"{1e3 * replay.runtime_s:9.2f} "
+              f"{replay.overlap_efficiency:5.2f} {bound:>8}  {per}")
 
     # --- capacity sweep on one target ------------------------------------
     base = hw.get_target(args.target)
@@ -94,6 +106,12 @@ def main() -> None:
     chain = partition.plan_chain(g, target=hw.TPU_V5E)
     print("\ngraph partitioner (tpu_v5e):")
     print(chain.summary())
+
+    if args.timeline:
+        chosen = partition.plan_chain(g, target=base)
+        print(f"\nreplayed schedule on {base.name} "
+              f"(first steps, {chosen.schedule}):")
+        print(sim.chain_timeline(chosen, max_steps=2))
 
     if args.arch:
         from repro import configs

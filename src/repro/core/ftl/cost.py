@@ -9,13 +9,27 @@ segments must be priced with a joint latency model — the **modeled
 runtime** that is the solver's objective:
 
     transfer = Σ_level  bytes(level) / bw(level)  +  transfers(level) · dma_setup(level)
-    compute  = group FLOPs / Target.flops
+    compute  = per-engine roofline over the group's op kinds
     runtime  = max(compute, transfer)          (hw.modeled_runtime)
 
-Compute time depends only on the group's full dim sizes, so within one
-group the runtime objective reduces to: minimize transfer time while it
-dominates, and break pure-compute-bound ties by (traffic, DMA count) —
-fusion that buys no runtime must still not cost bytes.
+The compute term is priced per op: each op's FLOPs run on the engine
+``Target.engine_rate`` assigns its kind (the implicit single ``core``
+engine at ``Target.flops`` when the target declares none — the legacy
+single-rate model, bit-identical), divided by an **MXU lane-utilization
+factor**: a GEMM whose output-lane (last-axis) tile is narrower than the
+kernel's ``mxu_preferred`` feeds only that fraction of the systolic
+array's columns, so its effective rate drops by ``min(1, tile/preferred)``
+(:func:`lane_utilization`).  The factor is 1 for any lane tile ≥ the
+preferred width and monotone non-decreasing in the tile size, so the
+solver's optimistic full-size prune stays a valid lower bound and
+aligned plans price exactly as before.  Engines overlap; work within one
+engine serializes — ``Target.compute_time_by_kind`` semantics.
+
+Compute time therefore depends on tile sizes only through utilization
+(never increasing as tiles grow), so within one group the runtime
+objective still reduces to: minimize transfer time while it dominates,
+and break pure-compute-bound ties by (traffic, DMA count) — fusion that
+buys no runtime must still not cost bytes.
 
 Each streamed tensor is assigned a *home* backing level by the target
 (smallest-first first-fit over level capacities — ``Target.assign_homes``),
@@ -55,7 +69,20 @@ from typing import Mapping, Sequence
 from repro.core import hw as hwlib
 
 from .constraints import DimConstraint, accumulator_tensors
-from .ir import FusionGroup, Role, TensorSpec
+from .ir import FusionGroup, OpNode, Role, TensorSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCompute:
+    """Compute pricing of one op of the group — the per-engine partition
+    the schedule lowering (``repro.sim.schedule``) consumes."""
+
+    name: str
+    kind: str
+    engine: str            # Target engine the kind is assigned to
+    flops: int             # raw modeled FLOPs of the op
+    utilization: float     # MXU lane-utilization factor in (0, 1]
+    seconds: float         # flops / (engine rate · utilization)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,12 +94,17 @@ class CostReport:
     per_tensor_traffic: dict[str, int]
     macs: int
     transfer_time_s: float = 0.0        # modeled DMA time
-    compute_time_s: float = 0.0         # group FLOPs / Target.flops
+    compute_time_s: float = 0.0         # per-engine roofline (max/engine)
     flops: int = 0                      # modeled group FLOPs
     per_level_traffic: dict[str, int] = dataclasses.field(
         default_factory=dict)           # level name -> bytes
     per_level_transfers: dict[str, int] = dataclasses.field(
         default_factory=dict)           # level name -> DMA count
+    tensor_homes: dict[str, str] = dataclasses.field(
+        default_factory=dict)           # tensor name -> home level name
+    op_compute: tuple[OpCompute, ...] = ()
+    per_engine_compute_s: dict[str, float] = dataclasses.field(
+        default_factory=dict)           # engine name -> serialized seconds
 
     @property
     def modeled_runtime_s(self) -> float:
@@ -84,6 +116,24 @@ class CostReport:
     @property
     def compute_bound(self) -> bool:
         return self.compute_time_s >= self.transfer_time_s
+
+    @property
+    def n_steps(self) -> int:
+        """Tile steps of the schedule: the grid's total block count (1
+        for a single-block plan) — what the schedule IR replays."""
+        steps = 1
+        for _, c in self.grid:
+            steps *= c
+        return steps
+
+    @property
+    def mxu_utilization(self) -> float:
+        """FLOP-weighted lane utilization of the assignment (1.0 = every
+        GEMM tile feeds full MXU columns)."""
+        if not self.op_compute:
+            return 1.0
+        eff = sum(oc.flops / oc.utilization for oc in self.op_compute)
+        return self.flops / eff if eff else 1.0
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -122,6 +172,63 @@ def vmem_usage(
     for acc in accumulator_tensors(group, tiles, cons):
         total += acc.bytes_tile(tiles)
     return total
+
+
+def lane_utilization(op: OpNode, tiles: Mapping[str, int]) -> float:
+    """MXU lane-utilization of one op's tile assignment.
+
+    A GEMM whose output lane (last-axis) tile is narrower than the
+    kernel policy's ``mxu_preferred`` width occupies only
+    ``tile/preferred`` of the systolic array's columns — a head-dim-64
+    PV product on a 128-lane MXU runs at half rate no matter how the
+    other dims tile.  ``min(1, tile/preferred)`` is monotone
+    non-decreasing in the tile size (a ≥-preferred tile always prices at
+    peak), which the solver's optimistic full-size prune relies on.
+    Non-GEMM ops are not discounted: the VPU consumes whole vregs
+    regardless and their compute term is second-order.
+    """
+    if op.kind != "gemm":
+        return 1.0
+    lane = op.output.dims[-1]
+    tile = tiles.get(lane)
+    if tile is None:
+        return 1.0
+    return min(1.0, tile / op.policy.mxu_preferred)
+
+
+def compute_costs(
+    group: FusionGroup,
+    tiles: Mapping[str, int],
+    full_sizes: Mapping[str, int],
+    target: hwlib.Target,
+) -> tuple[tuple[OpCompute, ...], dict[str, float], float]:
+    """Per-op / per-engine compute pricing of an assignment.
+
+    Returns ``(op_compute, per_engine_seconds, compute_time_s)``.  Each
+    op's FLOPs (at the constraint sizes) run on the engine its kind maps
+    to, rate-discounted by :func:`lane_utilization`; engines overlap, so
+    the group's compute time is the busiest engine's serialized time.
+    Engine-less targets collapse to the legacy single-rate formula via
+    effective FLOPs (``Σ flops/utilization``), bit-identical to
+    ``Target.compute_time_s`` when every tile is lane-aligned.
+    """
+    ops: list[OpCompute] = []
+    per_engine: dict[str, float] = {}
+    eff_total = 0.0
+    for op in group.ops:
+        f = op.flops(full_sizes)
+        util = lane_utilization(op, tiles)
+        engine, rate = target.engine_rate(op.kind)
+        secs = f / (rate * util)
+        ops.append(OpCompute(name=op.name, kind=op.kind, engine=engine,
+                             flops=f, utilization=util, seconds=secs))
+        per_engine[engine] = per_engine.get(engine, 0.0) + secs
+        eff_total += f if util == 1.0 else f / util
+    if target.engines:
+        compute_s = max(per_engine.values(), default=0.0)
+    else:
+        compute_s = hwlib.compute_time(eff_total, target.flops)
+    return tuple(ops), per_engine, compute_s
 
 
 def _revisit(
@@ -207,8 +314,9 @@ def evaluate(
     # sharded_sizes the solver prices the per-shard problem, and the
     # compute term must cover the same per-shard work the transfer term
     # does or sharded plans would look spuriously compute-bound.
-    flops = sum(op.flops(full_sizes) for op in group.ops)
-    compute_s = target.compute_time_s(flops)
+    op_costs, per_engine, compute_s = compute_costs(
+        group, tiles, full_sizes, target)
+    flops = sum(oc.flops for oc in op_costs)
 
     if order is None:
         best = None
@@ -250,6 +358,9 @@ def evaluate(
         flops=flops,
         per_level_traffic=lvl_bytes,
         per_level_transfers=lvl_dma,
+        tensor_homes={n: lv.name for n, lv in homes.items()},
+        op_compute=op_costs,
+        per_engine_compute_s=per_engine,
     )
 
 

@@ -51,6 +51,7 @@ def _runtime_ctx(
         gated=cfg.mlp_gated,
         act=cfg.mlp_act,
         target=plan.target,
+        head_dim=cfg.resolved_head_dim,
     )
 
 

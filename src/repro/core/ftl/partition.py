@@ -80,6 +80,17 @@ class Segment:
         return self.plan.report.compute_bound
 
     @property
+    def n_steps(self) -> int:
+        """Tile steps of one run of this segment's schedule."""
+        return self.plan.n_steps
+
+    @property
+    def per_engine_compute_s(self) -> dict[str, float]:
+        """Engine-serialized compute seconds, multiplicity included."""
+        return {e: t * self.repeat
+                for e, t in self.plan.per_engine_compute_s.items()}
+
+    @property
     def per_level_traffic(self) -> dict[str, int]:
         return {name: b * self.repeat
                 for name, b in self.plan.per_level_traffic.items()}
@@ -126,6 +137,15 @@ class ChainPlan:
     def compute_bound(self) -> bool:
         """True when compute dominates every segment of the plan."""
         return all(s.compute_bound for s in self.segments)
+
+    @property
+    def per_engine_compute_s(self) -> dict[str, float]:
+        """Engine-serialized compute seconds, summed over segments."""
+        out: dict[str, float] = {}
+        for s in self.segments:
+            for e, t in s.per_engine_compute_s.items():
+                out[e] = out.get(e, 0.0) + t
+        return out
 
     @property
     def per_level_traffic(self) -> dict[str, int]:

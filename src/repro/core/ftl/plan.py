@@ -88,6 +88,18 @@ class TilePlan:
         return self.report.compute_bound
 
     @property
+    def n_steps(self) -> int:
+        """Tile steps of the schedule (grid block count) — what the
+        schedule IR in ``repro.sim`` replays event by event."""
+        return self.report.n_steps
+
+    @property
+    def per_engine_compute_s(self) -> dict[str, float]:
+        """Serialized compute seconds per Target engine (the implicit
+        ``core`` engine for engine-less targets)."""
+        return self.report.per_engine_compute_s
+
+    @property
     def per_level_traffic(self) -> dict[str, int]:
         return self.report.per_level_traffic
 

@@ -54,14 +54,112 @@ class ExecContext:
     gated: bool = False
     act: str = "gelu"
     target: hwlib.Target | None = None   # the plan's memory hierarchy
+    head_dim: int = 0            # attention kernels' footprint probe
 
 
 def _vmem_class(target: hwlib.Target | None) -> bool:
-    """True when the target's fast level can host the Pallas kernels'
-    double-buffered pipelines (a TPU-VMEM-class scratchpad).  A plan made
-    for a KiB-scale scratchpad (rv32_l1_l2) must not bind them even on a
-    TPU host — its tile choices assume a different machine."""
+    """Capacity-class fallback for *shape-less* contexts: can the
+    target's fast level plausibly host a Pallas double-buffered
+    pipeline at all?  When the context carries shapes, qualification
+    uses the kernel's actual tile footprint instead
+    (:func:`_mlp_kernel_fits` / :func:`_attention_kernel_fits`)."""
     return target is None or target.fast.capacity_bytes >= 4 * (1 << 20)
+
+
+@functools.lru_cache(maxsize=1024)
+def _mlp_kernel_footprint_fits(m: int, d_model: int, d_ff: int, dtype: str,
+                               gated: bool, act: str,
+                               target: hwlib.Target) -> bool:
+    """True when the fused-MLP Pallas kernel's own dataflow (K and N
+    whole — weight panels resident, M/F tiled) has a tile assignment
+    whose double-buffered footprint fits the target's fast level: the
+    same solve ``ops.plan_mlp_blocks`` runs to pick the kernel's block
+    sizes, so an executor qualifies iff its kernel is actually
+    plannable at this shape on this machine."""
+    g = graph.mlp_graph(m=m, d_model=d_model, d_ff=d_ff, dtype=dtype,
+                        gated=gated, act=act)
+    try:
+        solve(g.group(0, g.n_ops), target=target,
+              whole_dims=frozenset({"K", "N"}))
+        return True
+    except InfeasibleError:
+        return False
+
+
+@functools.lru_cache(maxsize=1024)
+def _partial_mlp_footprint_fits(m: int, d_model: int, d_ff: int,
+                                dtype: str, act: str,
+                                target: hwlib.Target) -> bool:
+    """The *partial* Pallas path runs two separate kernels (gemm_act for
+    the up projection, gemm for the down projection), so each GEMM needs
+    only its own weight panel resident — probe them independently
+    (matching ``ops.plan_gemm_blocks``), not the fused whole-K/N solve."""
+    try:
+        solve(graph.gemm_act_graph(m=m, k=d_model, n=d_ff, dtype=dtype,
+                                   act=act).group(0, 2), target=target)
+        solve(graph.gemm_chain_graph(m=m, dims_kn=[d_ff, d_model],
+                                     dtype=dtype).group(0, 1),
+              target=target)
+        return True
+    except InfeasibleError:
+        return False
+
+
+@functools.lru_cache(maxsize=1024)
+def _attention_kernel_footprint_fits(m: int, head_dim: int, dtype: str,
+                                     target: hwlib.Target) -> bool:
+    """Flash-attention analogue: head dim whole (the kernel's online
+    softmax streams Tk), q/k tiles solved against the fast level."""
+    g = graph.attention_graph(q_len=m, kv_len=m, head_dim=head_dim,
+                              dtype=dtype)
+    try:
+        partition.plan_fixed(g, (), target=target)
+        return True
+    except InfeasibleError:
+        return False
+
+
+def _mlp_kernel_fits(c: ExecContext) -> bool:
+    """Per-target Pallas MLP qualification (ROADMAP item): the kernel's
+    *actual tile footprint* at the context's shapes must be plannable on
+    the target — a weight panel that cannot fit the fast level
+    disqualifies the kernel no matter how roomy the capacity class says
+    the scratchpad is.  The VMEM-class floor stays as a conjunct: the
+    Pallas pipeline machinery itself needs TPU-VMEM-scale headroom, and
+    a plan made for a KiB-scale scratchpad must not bind these kernels
+    even when its (tiny) tiles would technically fit."""
+    if c.target is None:
+        return True
+    if not _vmem_class(c.target):
+        return False
+    if not (c.m and c.d_model and c.d_ff):
+        return True
+    return _mlp_kernel_footprint_fits(c.m, c.d_model, c.d_ff, c.dtype,
+                                      c.gated, c.act, c.target)
+
+
+def _partial_mlp_kernel_fits(c: ExecContext) -> bool:
+    """Footprint probe for the partial Pallas MLP: per-GEMM, since its
+    kernels run sequentially and never co-reside both weight panels."""
+    if c.target is None:
+        return True
+    if not _vmem_class(c.target):
+        return False
+    if not (c.m and c.d_model and c.d_ff):
+        return True
+    return _partial_mlp_footprint_fits(c.m, c.d_model, c.d_ff, c.dtype,
+                                       c.act, c.target)
+
+
+def _attention_kernel_fits(c: ExecContext) -> bool:
+    if c.target is None:
+        return True
+    if not _vmem_class(c.target):
+        return False
+    if not (c.m and c.head_dim):
+        return True
+    return _attention_kernel_footprint_fits(c.m, c.head_dim, c.dtype,
+                                            c.target)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,12 +326,12 @@ def _run_xla_gemm(x, w, *, target=None):
 register(Executor(
     name="pallas_fused_mlp", kind="mlp", backend="pallas", priority=100,
     qualifies=lambda c: (c.platform == "tpu" and c.schedule == "fused"
-                         and _vmem_class(c.target)),
+                         and _mlp_kernel_fits(c)),
     run=_run_pallas_fused_mlp))
 register(Executor(
     name="pallas_partial_mlp", kind="mlp", backend="pallas", priority=90,
     qualifies=lambda c: (c.platform == "tpu" and c.schedule == "partial"
-                         and not c.gated and _vmem_class(c.target)),
+                         and not c.gated and _partial_mlp_kernel_fits(c)),
     run=_run_pallas_partial_mlp))
 register(Executor(
     name="xla_scan_mlp", kind="mlp", backend="xla", priority=50,
@@ -251,7 +349,7 @@ register(Executor(
     name="pallas_flash_attention", kind="attention", backend="pallas",
     priority=100,
     qualifies=lambda c: (c.platform == "tpu" and c.schedule != "unfused"
-                         and _vmem_class(c.target)),
+                         and _attention_kernel_fits(c)),
     run=_run_pallas_attention))
 register(Executor(
     name="xla_ref_attention", kind="attention", backend="xla", priority=10,
@@ -383,7 +481,7 @@ def _plan_block_cached(cfg, m: int, dtype: str | None,
             m=m, d_model=cfg.d_model,
             d_ff=cfg.moe_d_ff if cfg.is_moe else cfg.d_ff,
             dtype=dtype or cfg.dtype, gated=cfg.mlp_gated, act=cfg.mlp_act,
-            target=target)
+            target=target, head_dim=cfg.resolved_head_dim)
         bindings.append(GroupBinding(segment=seg, kind=kind,
                                      executor=find(kind, ctx).name))
     return BlockPlan(chain=chain, bindings=tuple(bindings), platform=plat,

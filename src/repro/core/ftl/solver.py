@@ -10,11 +10,13 @@ at its pipeline ``buffer_depth``.
 Pruning relies on two monotonicities:
   * fast-memory footprint grows with tile sizes -> feasibility prune from
     below,
-  * per-tensor traffic AND DMA count shrink with tile sizes — the
-    per-tensor level weights are tile-independent and the compute term is
-    tile-invariant — so the full cost key with the remaining dims at full
-    size is a component-wise (hence lexicographic) lower bound over the
-    subtree.  Bounding the whole key (not just the time term) keeps the
+  * per-tensor traffic, DMA count AND compute time shrink (or stay) with
+    tile sizes — the per-tensor level weights are tile-independent and
+    the compute term depends on tiles only through the lane-utilization
+    factor, which is monotone non-decreasing in the lane tile
+    (``cost.lane_utilization``) — so the full cost key with the
+    remaining dims at full size is a component-wise (hence
+    lexicographic) lower bound over the subtree.  Bounding the whole key (not just the time term) keeps the
     prune biting in the compute-bound regime, where every assignment ties
     on runtime and the search would otherwise degenerate to exhaustive.
 
@@ -75,11 +77,8 @@ def solve(
         rep = evaluate(group, tiles, cons, target=target)
         if rep.vmem_bytes > budget:
             return
-        steps = 1
-        for _, c in rep.grid:
-            steps *= c
         key = (rep.modeled_runtime_s, rep.traffic_bytes, rep.dma_transfers,
-               steps)
+               rep.n_steps)
         if state.best_key is None or key < state.best_key:
             state.best_key = key
             state.best_tiles = dict(tiles)

@@ -24,20 +24,31 @@ plus a peak-FLOP/s figure:
   spills past a full L2 exactly like the paper's Fig. 3 regime) and
   prices its traffic at that level's bandwidth.
 
-Presets: :data:`TPU_V5E` (the repo's serving target), :data:`CPU_CACHE`
-(a cache-blocked x86 core), and :data:`RV32_L1_L2` (Siracusa-like RV32
-cluster: L1 TCDM fast level with L2/L3 backing — the paper's platform).
+A :class:`Target` may additionally carry :class:`Engine` entries — named
+compute units with a per-op-kind FLOP/s rate map (the Siracusa NPU runs
+GEMMs while the RV32 cluster runs GeLU).  Work of different engines
+overlaps; work on one engine serializes, so a multi-engine target's
+compute time is ``max`` over engines of each engine's serialized time.
+An engine-less target keeps the single ``Target.flops`` rate for every
+kind (all existing presets are unchanged).
 
-The process-wide default is :func:`default_target` (``FTL_TARGET`` env
-var, else ``tpu_v5e``); planners resolve ``target=None`` through it and
-carry the resolved target in their plan-cache keys, so switching targets
-can never serve a stale plan.
+Presets: :data:`TPU_V5E` (the repo's serving target), :data:`CPU_CACHE`
+(a cache-blocked x86 core), :data:`RV32_L1_L2` (Siracusa-like RV32
+cluster: L1 TCDM fast level with L2/L3 backing — the paper's platform),
+and :data:`RV32_NPU` (the same hierarchy plus the N-EUREKA NPU as a
+separate GEMM engine — the paper's cluster+NPU overlap regime).
+
+The process-wide default is :func:`default_target` (``set_default_target``
+override, then the ``FTL_TARGET`` env var, then :func:`detect_target`'s
+reading of ``jax.devices()``); planners resolve ``target=None`` through
+it and carry the resolved target in their plan-cache keys, so switching
+targets can never serve a stale plan.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Iterable, Mapping
+from typing import Iterable, Mapping, Sequence
 
 KB = 1 << 10
 MB = 1 << 20
@@ -80,8 +91,37 @@ class MemoryLevel:
 
 
 @dataclasses.dataclass(frozen=True)
+class Engine:
+    """One compute unit of a :class:`Target` with per-op-kind rates.
+
+    ``rates`` maps an op kind (``'gemm'``, ``'elementwise'``, ...) to the
+    FLOP/s this engine sustains for that kind; the pseudo-kind ``'*'`` is
+    a catch-all rate for any kind not named by *any* engine (a scalar
+    cluster runs whatever the accelerator cannot).  Work assigned to one
+    engine serializes; distinct engines run concurrently — that is the
+    paper's cluster+NPU overlap, and what the discrete-event simulator
+    (``repro.sim``) replays per tile step.
+
+    Frozen and tuple-backed so an engine-carrying Target stays hashable
+    (plan-cache keys).
+    """
+
+    name: str
+    rates: tuple[tuple[str, float], ...]
+
+    def __post_init__(self):
+        for kind, rate in self.rates:
+            if rate <= 0:
+                raise ValueError(
+                    f"engine {self.name}: rate for {kind!r} must be "
+                    f"positive, got {rate}"
+                )
+
+
+@dataclasses.dataclass(frozen=True)
 class Target:
-    """A machine the planner prices plans for: memory levels + peak FLOPs.
+    """A machine the planner prices plans for: memory levels + peak FLOPs
+    (+ optionally named per-op-kind :class:`Engine`\\s).
 
     Hashable (all-frozen), so it participates directly in every plan
     cache key.
@@ -90,6 +130,7 @@ class Target:
     name: str
     levels: tuple[MemoryLevel, ...]
     flops: float
+    engines: tuple[Engine, ...] = ()
 
     def __post_init__(self):
         if len(self.levels) < 2:
@@ -104,6 +145,11 @@ class Target:
                     f"({deep.capacity_bytes} B) smaller than the level "
                     f"above it ({shallow.name}, {shallow.capacity_bytes} B)"
                 )
+        names = [e.name for e in self.engines]
+        if len(set(names)) != len(names):
+            raise ValueError(
+                f"target {self.name}: duplicate engine names {names}"
+            )
 
     # ------------------------------------------------------------------
     @property
@@ -211,6 +257,59 @@ class Target:
         return compute_time(flops, self.flops)
 
     # ------------------------------------------------------------------
+    # per-engine compute
+    # ------------------------------------------------------------------
+    def engine_rate(self, kind: str) -> tuple[str, float]:
+        """(engine name, FLOP/s) that runs ops of ``kind``.
+
+        Engine-less targets run everything on an implicit ``'core'``
+        engine at ``Target.flops``.  With engines, an exact-kind rate
+        wins over a catch-all ``'*'`` rate; among several matches the
+        fastest engine takes the work (a GEMM never runs on the scalar
+        cluster while an NPU is present).
+        """
+        if not self.engines:
+            return ("core", self.flops)
+        exact = [(e.name, r) for e in self.engines
+                 for k, r in e.rates if k == kind]
+        if exact:
+            return max(exact, key=lambda nr: nr[1])
+        wild = [(e.name, r) for e in self.engines
+                for k, r in e.rates if k == "*"]
+        if wild:
+            return max(wild, key=lambda nr: nr[1])
+        raise ValueError(
+            f"target {self.name}: no engine runs op kind {kind!r} and "
+            f"none advertises a '*' catch-all rate"
+        )
+
+    def engine_times(self, flops_by_kind: Mapping[str, float]
+                     ) -> dict[str, float]:
+        """Serialized busy time per engine for the given work mix."""
+        times: dict[str, float] = {e.name: 0.0 for e in self.engines} \
+            or {"core": 0.0}
+        for kind, flops in flops_by_kind.items():
+            name, rate = self.engine_rate(kind)
+            times[name] += flops / rate
+        return times
+
+    def compute_time_by_kind(self, flops_by_kind: Mapping[str, float]
+                             ) -> float:
+        """Compute time of a work mix: engines overlap, each serializes.
+
+        Engine-less targets reduce to the single-rate
+        ``compute_time(Σ flops, Target.flops)`` (bit-identical to the
+        legacy formula so existing plan pins survive); with engines the
+        mix is split by kind and the slowest engine's serialized time is
+        the floor — fusing a cluster-side epilogue under an NPU GEMM
+        then genuinely hides it, the paper's −60.1 % regime.
+        """
+        if not self.engines:
+            return compute_time(float(sum(flops_by_kind.values())),
+                                self.flops)
+        return max(self.engine_times(flops_by_kind).values(), default=0.0)
+
+    # ------------------------------------------------------------------
     def describe(self) -> str:
         parts = [
             f"{lv.name} {_fmt_bytes(lv.capacity_bytes)}"
@@ -311,8 +410,27 @@ RV32_L1_L2 = Target(
     flops=6e9,
 )
 
+# Siracusa with the N-EUREKA NPU enabled (the paper's cluster+NPU
+# −60.1 % regime): same L1/L2/L3 hierarchy, but GEMMs run on the NPU
+# (~64 GMAC/s int8 → 128 GFLOP/s) while everything else — GeLU,
+# softmax, residual adds — stays on the 8-core scalar cluster
+# (~0.3 G elem/s).  The two engines overlap, so a fused elementwise
+# epilogue hides under the NPU's next tile instead of serializing.
+# Constants absorbed from benchmarks/hw_profiles.py's SIRACUSA_NPU
+# (macs_per_s / ew_per_s), which now derives its planning target from
+# this shared model.
+RV32_NPU = Target(
+    name="rv32_npu",
+    levels=RV32_L1_L2.levels,
+    flops=128e9,
+    engines=(
+        Engine("npu", (("gemm", 128e9),)),
+        Engine("cluster", (("*", 0.3e9),)),
+    ),
+)
+
 PRESETS: dict[str, Target] = {
-    t.name: t for t in (TPU_V5E, CPU_CACHE, RV32_L1_L2)
+    t.name: t for t in (TPU_V5E, CPU_CACHE, RV32_L1_L2, RV32_NPU)
 }
 
 
@@ -330,24 +448,99 @@ def presets() -> Iterable[Target]:
 
 
 # ---------------------------------------------------------------------------
+# target auto-detection
+# ---------------------------------------------------------------------------
+
+# TPU generations the detector recognizes (substring of
+# ``device.device_kind``, checked longest-first): fast-level capacity the
+# planner may claim (physical VMEM minus Pallas pipeline headroom), peak
+# bf16 FLOP/s, HBM bytes/s and capacity.  v5e stays the preset; the
+# others are order-of-magnitude public figures — relative plan decisions,
+# not absolute times, are what the planner consumes.
+_TPU_GENERATIONS: tuple[tuple[str, tuple[int, float, float, float]], ...] = (
+    ("v5 lite", (96 * MB, 197e12, 819e9, 16e9)),
+    ("v5e", (96 * MB, 197e12, 819e9, 16e9)),
+    ("v5p", (96 * MB, 459e12, 2765e9, 95e9)),
+    ("v5", (96 * MB, 459e12, 2765e9, 95e9)),
+    ("v6 lite", (96 * MB, 918e12, 1640e9, 32e9)),
+    ("v6e", (96 * MB, 918e12, 1640e9, 32e9)),
+    ("v4", (96 * MB, 275e12, 1228e9, 32e9)),
+    ("v3", (96 * MB, 123e12, 900e9, 32e9)),
+    ("v2", (96 * MB, 46e12, 700e9, 16e9)),
+)
+
+
+def _tpu_target(device_kind: str) -> Target:
+    kind = device_kind.lower()
+    for tag, (vmem, flops, hbm_bw, hbm_bytes) in _TPU_GENERATIONS:
+        if tag in kind:
+            if tag in ("v5 lite", "v5e"):
+                return TPU_V5E
+            name = "tpu_" + tag.replace(" lite", "e").replace(" ", "")
+            return Target(
+                name=name,
+                levels=(
+                    MemoryLevel("vmem", vmem, 2.0e13, buffer_depth=2),
+                    MemoryLevel("hbm", int(hbm_bytes), hbm_bw,
+                                dma_setup_s=1e-6),
+                    MemoryLevel("ici", 1 << 50, 50e9, dma_setup_s=5e-6),
+                ),
+                flops=flops,
+            )
+    return TPU_V5E
+
+
+def detect_target(devices: Sequence | None = None) -> Target:
+    """Derive a planning target from the JAX device list.
+
+    TPU hosts map their generation (``device_kind``) to VMEM size / peak
+    FLOP/s / HBM bandwidth; CPU hosts get the cache-blocked
+    :data:`CPU_CACHE` preset.  Anything else (GPU, or a host where jax
+    itself is unavailable) falls back to :data:`TPU_V5E` — the repo's
+    serving target — until a dedicated hierarchy lands.  ``devices``
+    is injectable for tests; None reads ``jax.devices()``.
+    """
+    if devices is None:
+        try:
+            import jax
+            devices = jax.devices()
+        except Exception:  # jax missing/uninitializable: planner-only use
+            return TPU_V5E
+    if not devices:
+        return TPU_V5E
+    dev = devices[0]
+    platform = getattr(dev, "platform", "")
+    if platform == "tpu":
+        return _tpu_target(getattr(dev, "device_kind", ""))
+    if platform == "cpu":
+        return CPU_CACHE
+    return TPU_V5E
+
+
+# ---------------------------------------------------------------------------
 # process-wide default
 # ---------------------------------------------------------------------------
 
 _DEFAULT: list[Target | None] = [None]
+_DETECTED: list[Target | None] = [None]     # detect_target() memo
 
 
 def default_target() -> Target:
     """The target planners resolve ``target=None`` through.
 
     Order: :func:`set_default_target` override, then the ``FTL_TARGET``
-    env var (a preset name), then :data:`TPU_V5E`.
+    env var (a preset name), then :func:`detect_target` on the process's
+    JAX device list (memoized — the device list cannot change
+    in-process).
     """
     if _DEFAULT[0] is not None:
         return _DEFAULT[0]
     env = os.environ.get("FTL_TARGET")
     if env:
         return get_target(env)
-    return TPU_V5E
+    if _DETECTED[0] is None:
+        _DETECTED[0] = detect_target()
+    return _DETECTED[0]
 
 
 def set_default_target(target: Target | str | None) -> None:

@@ -46,6 +46,25 @@ def _resolve(backend: Backend) -> str:
 # planned block sizes
 # ---------------------------------------------------------------------------
 
+def _kernel_target(target: hwlib.Target | None) -> hwlib.Target:
+    """Planning target for the Pallas TPU kernels' block sizes.
+
+    An explicit target wins.  ``None`` resolves through the process
+    default *only when* that default is a VMEM-class machine: the
+    auto-detected default on a CPU host is the cache-blocked
+    ``cpu_cache`` preset, whose 1 MiB fast level cannot hold these
+    kernels' whole-K/N weight panels — planning TPU kernels against it
+    would raise ``InfeasibleError`` (or pick nonsense blocks) in
+    interpret mode.  Such hosts plan the kernels for :data:`TPU_V5E`.
+    """
+    if target is not None:
+        return target
+    default = hwlib.default_target()
+    if default.fast.capacity_bytes >= 4 * (1 << 20):
+        return default
+    return hwlib.TPU_V5E
+
+
 @functools.lru_cache(maxsize=512)
 def _plan_mlp_blocks(m: int, k: int, f: int, dtype: str, gated: bool,
                      act: str, target: hwlib.Target) -> tuple[int, int]:
@@ -62,8 +81,7 @@ def plan_mlp_blocks(
 ) -> tuple[int, int]:
     """(block_m, block_f) for the fused_mlp kernel from the FTL solver."""
     return _plan_mlp_blocks(m, k, f, dtype, gated, act,
-                            target if target is not None
-                            else hwlib.default_target())
+                            _kernel_target(target))
 
 
 @functools.lru_cache(maxsize=512)
@@ -86,9 +104,7 @@ def plan_gemm_blocks(
     target: hwlib.Target | None = None,
 ) -> tuple[int, int, int]:
     """(block_m, block_n, block_k) for gemm / gemm_act kernels."""
-    return _plan_gemm_blocks(m, k, n, dtype, act,
-                             target if target is not None
-                             else hwlib.default_target())
+    return _plan_gemm_blocks(m, k, n, dtype, act, _kernel_target(target))
 
 
 @functools.lru_cache(maxsize=512)
@@ -111,8 +127,7 @@ def plan_attention_blocks(
     kept it whole (its VMEM model allows a whole-row S tile; the kernel
     streams Tk for the online softmax)."""
     return _plan_attention_blocks(tq, tk, dh, dtype,
-                                  target if target is not None
-                                  else hwlib.default_target())
+                                  _kernel_target(target))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,53 @@
+"""Tile-level schedule IR + discrete-event DMA/engine simulator.
+
+The planner's objective (``max(compute_time, transfer_time)`` per
+segment) is a closed-form *claim* about overlap: double-buffered DMA
+hides behind compute.  This package makes that claim falsifiable — and
+unlocks the paper's cluster+NPU overlap regime — by lowering a plan into
+an explicit per-tile-step event timeline and replaying it:
+
+* :mod:`repro.sim.schedule` lowers a
+  :class:`~repro.core.ftl.plan.TilePlan` /
+  :class:`~repro.core.ftl.partition.ChainPlan` /
+  :class:`~repro.core.ftl.registry.BlockPlan` into a :class:`Schedule`:
+  one ``DmaIn`` per tensor re-fetch (the cost model's revisit rule,
+  event by event), a per-engine ``Compute`` chain per tile step, one
+  ``DmaOut`` per completed output block — buffer slots from the fast
+  level's ``buffer_depth``, tensor homes from ``cost.evaluate``'s
+  per-level assignment, engines from the op-kind → ``hw.Engine`` map.
+* :mod:`repro.sim.des` replays a schedule respecting buffer-slot
+  hazards, DMA serialization at the fast-level port, and per-engine
+  concurrency, reporting simulated runtime, per-resource busy/stall
+  time and overlap efficiency.
+* :mod:`repro.sim.report` compares simulated against analytic runtime
+  and renders event timelines (``benchmarks/bench_schedule.py`` turns
+  the comparison into a CI gate).
+
+The simulated runtime is always ≥ the analytic modeled runtime (both
+charge identical total DMA and engine busy time; the DES adds only real
+serialization) and converges to it when the pipeline is deep enough for
+fill/drain to amortize — ``tests/test_sim.py`` pins both directions.
+"""
+from repro.core.hw import Engine  # noqa: F401  (re-export: sim's engine model)
+
+from .des import ChainSimResult, SimResult, simulate, simulate_chain
+from .engine import step_compute_chain
+from .report import chain_timeline, compare_plan, sim_rows, timeline
+from .schedule import (
+    Compute,
+    DmaIn,
+    DmaOut,
+    Schedule,
+    lower_block,
+    lower_chain,
+    lower_plan,
+)
+
+__all__ = [
+    "Engine",
+    "Schedule", "DmaIn", "Compute", "DmaOut",
+    "lower_plan", "lower_chain", "lower_block",
+    "SimResult", "ChainSimResult", "simulate", "simulate_chain",
+    "step_compute_chain",
+    "compare_plan", "sim_rows", "timeline", "chain_timeline",
+]

@@ -1,0 +1,249 @@
+"""Discrete-event replay of a :class:`~repro.sim.schedule.Schedule`.
+
+Resources and hazards:
+
+* **One DMA port** at the fast level: every ``DmaIn``/``DmaOut``
+  serializes through it in program order, each transfer priced at its
+  home backing level (``bytes/bw + dma_setup``).  This matches the
+  analytic transfer model — ``Σ_level bytes/bw + transfers·setup`` is a
+  *sum*, i.e. one engine moving everything — and Siracusa's single
+  cluster DMA.  Per-level busy time is still reported separately.
+* **One unit per engine**: compute events on the same engine serialize
+  (in order); distinct engines overlap.  Within a step the compute
+  chain respects op order (the cluster's GeLU waits for the NPU's GEMM
+  of the *same* tile), so cross-engine overlap emerges as a software
+  pipeline across steps rather than being assumed.
+* **Buffer-slot hazards** from ``buffer_depth``: fetch ``k`` of a
+  tensor may not start before the last compute consuming fetch
+  ``k − depth`` finished (depth 1 ⇒ load/compute serialize; depth ≥ 2 ⇒
+  prefetch runs ahead).  Symmetrically, a step may not start while its
+  output block's slot still awaits the write-back of block
+  ``b − depth``.
+* A step's compute waits for every streamed tile it consumes (the
+  Pallas/Deeploy contract: all copies for step ``s`` complete before
+  the step body runs).
+
+Every event's start time is a ``max`` over its dependencies, so the
+event graph is monotone: relaxing any hazard (e.g. a deeper buffer) can
+only move times earlier — the property ``tests/test_sim.py`` fuzzes.
+The simulated runtime is consequently ≥ the analytic
+``max(compute_time, transfer_time)`` (identical total busy time per
+resource, plus real serialization) and converges to it once the
+pipeline is deep enough to amortize fill/drain.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .schedule import Compute, DmaIn, Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Replay outcome of one schedule (one run of one segment)."""
+
+    runtime_s: float
+    busy_s: dict[str, float]          # 'dma' + 'engine:<name>' → busy time
+    per_level_busy_s: dict[str, float]
+    analytic_runtime_s: float
+    n_events: int
+    trace: tuple[tuple[object, float, float], ...] = ()
+
+    @property
+    def stall_s(self) -> dict[str, float]:
+        """Idle time per resource over the simulated span."""
+        return {r: self.runtime_s - b for r, b in self.busy_s.items()}
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """Busy fraction of the *dominant* resource: 1.0 means the
+        bottleneck never idles — the analytic max() was achieved."""
+        if self.runtime_s <= 0.0:
+            return 1.0
+        return max(self.busy_s.values(), default=0.0) / self.runtime_s
+
+    @property
+    def sim_over_analytic(self) -> float:
+        """Simulated / analytic runtime (≥ 1 up to float rounding)."""
+        if self.analytic_runtime_s <= 0.0:
+            return 1.0
+        return self.runtime_s / self.analytic_runtime_s
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSimResult:
+    """Replay of a whole chain: segments sequential, × multiplicity."""
+
+    segments: tuple[tuple[SimResult, int], ...]   # (result, repeat)
+
+    @property
+    def runtime_s(self) -> float:
+        return sum(r.runtime_s * rep for r, rep in self.segments)
+
+    @property
+    def analytic_runtime_s(self) -> float:
+        return sum(r.analytic_runtime_s * rep for r, rep in self.segments)
+
+    @property
+    def sim_over_analytic(self) -> float:
+        if self.analytic_runtime_s <= 0.0:
+            return 1.0
+        return self.runtime_s / self.analytic_runtime_s
+
+    @property
+    def busy_s(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for r, rep in self.segments:
+            for k, v in r.busy_s.items():
+                out[k] = out.get(k, 0.0) + v * rep
+        return out
+
+    @property
+    def overlap_efficiency(self) -> float:
+        if self.runtime_s <= 0.0:
+            return 1.0
+        return max(self.busy_s.values(), default=0.0) / self.runtime_s
+
+
+def simulate(
+    schedule: Schedule,
+    *,
+    buffer_depth: int | None = None,
+    trace: bool = False,
+) -> SimResult:
+    """Replay ``schedule``; ``buffer_depth`` overrides the lowered depth
+    (same logical schedule, different slot hazards and prefetch
+    distance — the depth-sweep hook).
+
+    The schedule's events are in *logical* step order (loads, computes,
+    store-backs of step ``s`` together); the DES derives the DMA issue
+    order from the depth: the loads for step ``s + depth − 1`` are
+    issued before step ``s``'s write-backs, exactly the classic
+    ``load(s+1); compute(s); store(s)`` double-buffer loop shape, so a
+    transfer-bound pipeline keeps the DMA port saturated instead of
+    queueing every prefetch behind the previous step's compute.
+    """
+    depth = buffer_depth if buffer_depth is not None \
+        else schedule.buffer_depth
+    if depth < 1:
+        raise ValueError(f"buffer_depth must be >= 1, got {depth}")
+    prefetch = depth - 1
+    steps = schedule.n_steps
+    levels = {lv.name: lv for lv in schedule.target.backing}
+
+    ins_by: dict[int, list[DmaIn]] = {}
+    comp_by: dict[int, list[Compute]] = {}
+    outs_by: dict[int, list] = {}
+    for ev in schedule.events:
+        if isinstance(ev, DmaIn):
+            ins_by.setdefault(ev.step, []).append(ev)
+        elif isinstance(ev, Compute):
+            comp_by.setdefault(ev.step, []).append(ev)
+        else:
+            outs_by.setdefault(ev.step, []).append(ev)
+
+    dma_free = 0.0                      # the fast-level DMA port
+    engine_free: dict[str, float] = {}
+    busy: dict[str, float] = {"dma": 0.0}
+    level_busy: dict[str, float] = {}
+    chain_finish = [0.0] * steps        # per-step compute-chain finish
+    use_steps: dict[str, list[int]] = {}   # per in-tensor fetch use-steps
+    ready_q: list[tuple[int, float]] = []  # (use_step, DmaIn finish) FIFO
+    ready_head = 0
+    out_finish: dict[str, list[float]] = {}   # DmaOut finishes per tensor
+    out_emitted: dict[str, int] = {}
+    last_finish = 0.0
+    timeline: list[tuple[object, float, float]] = []
+
+    def _note(ev, start, finish):
+        nonlocal last_finish
+        last_finish = max(last_finish, finish)
+        if trace:
+            timeline.append((ev, start, finish))
+
+    def _dma(ev) -> float:
+        lv = levels[ev.level]
+        dur = ev.bytes / lv.bw_bytes_per_s + lv.dma_setup_s
+        busy["dma"] += dur
+        level_busy[ev.level] = level_busy.get(ev.level, 0.0) + dur
+        return dur
+
+    def _issue_in(ev: DmaIn) -> None:
+        nonlocal dma_free
+        us = use_steps.setdefault(ev.tensor, [])
+        us.append(ev.step)
+        dur = _dma(ev)
+        start = dma_free
+        if ev.fetch >= depth:
+            # slot hazard: this fetch overwrites the buffer that held
+            # fetch f−depth, last consumed by the step before fetch
+            # f−depth+1 arrived — whose chain is already scheduled.
+            lu = us[ev.fetch - depth + 1] - 1
+            if lu >= 0:
+                start = max(start, chain_finish[lu])
+        finish = start + dur
+        dma_free = finish
+        ready_q.append((ev.step, finish))
+        _note(ev, start, finish)
+
+    def _run_step(e: int) -> None:
+        nonlocal dma_free, ready_head
+        # chain head: every streamed tile this step consumes is resident
+        gate = 0.0
+        while ready_head < len(ready_q) and ready_q[ready_head][0] <= e:
+            gate = max(gate, ready_q[ready_head][1])
+            ready_head += 1
+        # ...and the output block's slot has drained its write-back
+        for t, n in out_emitted.items():
+            if n >= depth:
+                gate = max(gate, out_finish[t][n - depth])
+        prev = gate
+        for ev in comp_by.get(e, ()):
+            eng = f"engine:{ev.engine}"
+            start = max(engine_free.get(eng, 0.0), prev)
+            finish = start + ev.seconds
+            engine_free[eng] = finish
+            busy[eng] = busy.get(eng, 0.0) + ev.seconds
+            prev = finish
+            _note(ev, start, finish)
+        chain_finish[e] = prev
+        for ev in outs_by.get(e, ()):
+            dur = _dma(ev)
+            start = max(dma_free, prev)
+            finish = start + dur
+            dma_free = finish
+            out_finish.setdefault(ev.tensor, []).append(finish)
+            out_emitted[ev.tensor] = out_emitted.get(ev.tensor, 0) + 1
+            _note(ev, start, finish)
+
+    for u in range(min(prefetch + 1, steps)):     # pipeline prologue
+        for ev in ins_by.get(u, ()):
+            _issue_in(ev)
+    for e in range(steps):
+        if e > 0 and e + prefetch < steps:
+            for ev in ins_by.get(e + prefetch, ()):
+                _issue_in(ev)
+        _run_step(e)
+
+    return SimResult(
+        runtime_s=last_finish,
+        busy_s=busy,
+        per_level_busy_s=level_busy,
+        analytic_runtime_s=schedule.modeled_runtime_s,
+        n_events=len(schedule.events),
+        trace=tuple(timeline),
+    )
+
+
+def simulate_chain(
+    schedules: tuple[tuple[Schedule, int], ...],
+    *,
+    buffer_depth: int | None = None,
+) -> ChainSimResult:
+    """Replay a lowered chain (``repro.sim.schedule.lower_chain`` output):
+    segments run sequentially, each simulated once and scaled by its
+    multiplicity — mirroring the analytic Σ-over-segments model."""
+    return ChainSimResult(segments=tuple(
+        (simulate(s, buffer_depth=buffer_depth), rep)
+        for s, rep in schedules
+    ))

@@ -1,0 +1,42 @@
+"""Engine-side lowering helpers: op chain → per-step compute events.
+
+The :class:`repro.core.hw.Engine` model itself lives in ``core/hw.py``
+(the :class:`~repro.core.hw.Target` carries it into every plan-cache
+key); this module owns the *schedule-side* view: how one tile step's
+arithmetic splits into a chain of per-engine compute events.
+
+``cost.evaluate`` prices each op on the engine its kind maps to
+(``Target.engine_rate``) and records the per-op seconds in
+``CostReport.op_compute``.  The lowering distributes each op's seconds
+uniformly over the grid's tile steps — total engine busy time is exactly
+the analytic per-engine compute time, so the simulator's floor matches
+the planner's — and merges adjacent same-engine ops into one event.  The
+chain order is the op (data-dependency) order: within a step the cluster
+GeLU waits for the NPU GEMM, but the NPU is then free for step ``s+1``
+while the cluster grinds step ``s`` — the software pipeline that makes
+the paper's fused NPU+cluster schedule overlap.
+"""
+from __future__ import annotations
+
+from repro.core.ftl.cost import CostReport
+
+
+def step_compute_chain(
+    report: CostReport,
+) -> tuple[tuple[str, float, tuple[str, ...]], ...]:
+    """Per-tile-step compute chain of a solved assignment.
+
+    Returns ``(engine, seconds_per_step, op_names)`` tuples in op order,
+    adjacent same-engine ops merged.  ``Σ seconds · n_steps`` equals the
+    analytic per-engine compute time (up to float rounding).
+    """
+    steps = report.n_steps
+    chain: list[tuple[str, float, tuple[str, ...]]] = []
+    for oc in report.op_compute:
+        per = oc.seconds / steps
+        if chain and chain[-1][0] == oc.engine:
+            eng, secs, names = chain[-1]
+            chain[-1] = (eng, secs + per, names + (oc.name,))
+        else:
+            chain.append((oc.engine, per, (oc.name,)))
+    return tuple(chain)

@@ -1,0 +1,211 @@
+"""Schedule IR: a plan lowered to explicit per-tile-step events.
+
+A :class:`Schedule` is the execution timeline the planner's closed-form
+cost model *implies*, made explicit (LoopTree-style): the solved grid is
+walked step by step (outer→inner, exactly the cost model's order) and
+every data movement and compute becomes one event:
+
+* :class:`DmaIn` — a streamed INPUT/WEIGHT tile copied from its home
+  backing level into a fast-memory buffer slot.  Emitted exactly when
+  the cost model's revisit rule says the tile must be (re)fetched: the
+  grid coordinates at positions outer than (or at) the tensor's
+  innermost grid dim form a *fetch key*; a new key is a new fetch.  The
+  per-tensor fetch count therefore reproduces
+  ``CostReport.per_tensor_traffic`` / ``dma_transfers`` event by event.
+* :class:`Compute` — one entry of the per-engine compute chain of a
+  step (:func:`repro.sim.engine.step_compute_chain`): ops priced on the
+  engine their kind maps to, chained in data-dependency order within
+  the step, pipelined across steps.
+* :class:`DmaOut` — a completed output block written back to its home
+  level (outputs accumulate in fast memory and are written once per
+  block, at the last step that touches the block).
+
+Buffer slots come from the fast level's ``buffer_depth``: fetch ``k`` of
+a tensor occupies slot ``k mod depth``, so depth 1 serializes load and
+compute while depth ≥ 2 lets the DMA run ahead — the hazard the
+discrete-event simulator (:mod:`repro.sim.des`) enforces.
+
+Multiplicity (per-head attention segments) is not unrolled: a segment is
+lowered once and its simulated runtime scales by ``Segment.repeat``,
+mirroring the analytic model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+from repro.core import hw as hwlib
+from repro.core.ftl.ir import Role
+from repro.core.ftl.partition import ChainPlan
+from repro.core.ftl.plan import TilePlan
+
+from .engine import step_compute_chain
+
+
+@dataclasses.dataclass(frozen=True)
+class DmaIn:
+    """Fetch ``tensor``'s current tile from ``level`` into slot ``slot``."""
+
+    step: int
+    tensor: str
+    level: str
+    bytes: int
+    fetch: int            # 0-based fetch index of this tensor
+    slot: int             # fetch % buffer_depth
+
+
+@dataclasses.dataclass(frozen=True)
+class Compute:
+    """One engine's share of tile step ``step`` (chained in op order)."""
+
+    step: int
+    engine: str
+    seconds: float
+    ops: tuple[str, ...]
+    seq: int              # position in the step's compute chain
+
+
+@dataclasses.dataclass(frozen=True)
+class DmaOut:
+    """Write completed output block ``block`` of ``tensor`` to ``level``."""
+
+    step: int
+    tensor: str
+    level: str
+    bytes: int
+    block: int            # 0-based completion index of this tensor
+    slot: int             # block % buffer_depth
+
+
+Event = Union[DmaIn, Compute, DmaOut]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A lowered segment: events in program order + analytic reference."""
+
+    name: str
+    target: hwlib.Target
+    n_steps: int
+    buffer_depth: int
+    events: tuple[Event, ...]
+    # analytic reference (from the CostReport that produced the plan)
+    compute_time_s: float
+    transfer_time_s: float
+    modeled_runtime_s: float
+    per_engine_compute_s: dict[str, float]
+    per_level_traffic: dict[str, int]
+
+    def dma_events(self) -> list[Union[DmaIn, DmaOut]]:
+        return [e for e in self.events if not isinstance(e, Compute)]
+
+    def compute_events(self) -> list[Compute]:
+        return [e for e in self.events if isinstance(e, Compute)]
+
+
+def _unflatten(s: int, counts: list[int]) -> tuple[int, ...]:
+    """Flat step index → grid coordinates, outer→inner."""
+    coords = [0] * len(counts)
+    for i in range(len(counts) - 1, -1, -1):
+        s, coords[i] = divmod(s, counts[i])
+    return tuple(coords)
+
+
+def lower_plan(plan: TilePlan, name: str | None = None) -> Schedule:
+    """Lower one solved :class:`TilePlan` into its :class:`Schedule`."""
+    rep = plan.report
+    target = plan.target
+    depth = target.fast.buffer_depth
+    dims = [d for d, _ in rep.grid]
+    counts = [c for _, c in rep.grid]
+    steps = rep.n_steps
+    group = plan.group
+
+    streamed = group.hbm_tensors()
+    ins = [t for t in streamed if t.role in (Role.INPUT, Role.WEIGHT)]
+    outs = [t for t in streamed if t.role is Role.OUTPUT]
+    homes = rep.tensor_homes
+    tile_bytes = {t.name: t.bytes_tile(plan.tiles) for t in streamed}
+
+    # Fetch key of an in-tensor = grid positions ≤ its innermost grid
+    # dim — a *prefix* of the (outer→inner) coordinate tuple, since every
+    # grid dim of the tensor sits at or above its innermost one.  The
+    # cost model's revisit product over exactly these positions is then
+    # literally the number of key changes along the walk.
+    def _prefix_len(t) -> int:
+        inner = -1
+        for i, d in enumerate(dims):
+            if d in t.dims:
+                inner = i
+        return inner + 1
+
+    in_prefix = {t.name: _prefix_len(t) for t in ins}
+    out_pos = {t.name: [i for i, d in enumerate(dims) if d in t.dims]
+               for t in outs}
+
+    # Last step touching each output block (outputs accumulate in fast
+    # memory; the write-back happens when the block is complete).
+    last_touch: dict[str, dict[tuple[int, ...], int]] = {
+        t.name: {} for t in outs}
+    for s in range(steps):
+        coords = _unflatten(s, counts)
+        for t in outs:
+            key = tuple(coords[i] for i in out_pos[t.name])
+            last_touch[t.name][key] = s
+
+    chain = step_compute_chain(rep)
+
+    events: list[Event] = []
+    prev_key: dict[str, tuple[int, ...]] = {}
+    fetch_n = {t.name: 0 for t in ins}
+    block_n = {t.name: 0 for t in outs}
+    for s in range(steps):
+        coords = _unflatten(s, counts)
+        for t in ins:
+            key = coords[: in_prefix[t.name]]
+            if prev_key.get(t.name) != key:
+                prev_key[t.name] = key
+                f = fetch_n[t.name]
+                fetch_n[t.name] = f + 1
+                events.append(DmaIn(
+                    step=s, tensor=t.name, level=homes[t.name],
+                    bytes=tile_bytes[t.name], fetch=f, slot=f % depth))
+        for seq, (engine, secs, op_names) in enumerate(chain):
+            events.append(Compute(step=s, engine=engine, seconds=secs,
+                                  ops=op_names, seq=seq))
+        for t in outs:
+            key = tuple(coords[i] for i in out_pos[t.name])
+            if last_touch[t.name][key] == s:
+                b = block_n[t.name]
+                block_n[t.name] = b + 1
+                events.append(DmaOut(
+                    step=s, tensor=t.name, level=homes[t.name],
+                    bytes=tile_bytes[t.name], block=b, slot=b % depth))
+
+    return Schedule(
+        name=name or group.name,
+        target=target,
+        n_steps=steps,
+        buffer_depth=depth,
+        events=tuple(events),
+        compute_time_s=rep.compute_time_s,
+        transfer_time_s=rep.transfer_time_s,
+        modeled_runtime_s=rep.modeled_runtime_s,
+        per_engine_compute_s=dict(rep.per_engine_compute_s),
+        per_level_traffic=dict(rep.per_level_traffic),
+    )
+
+
+def lower_chain(chain: ChainPlan) -> tuple[tuple[Schedule, int], ...]:
+    """Lower every segment of a :class:`ChainPlan`; returns
+    ``(schedule, repeat)`` pairs in execution order."""
+    return tuple(
+        (lower_plan(s.plan, name=f"{chain.graph.name}[{s.lo}:{s.hi}]"),
+         s.repeat)
+        for s in chain.segments
+    )
+
+
+def lower_block(block_plan) -> tuple[tuple[Schedule, int], ...]:
+    """Lower a :class:`~repro.core.ftl.registry.BlockPlan` (its chain)."""
+    return lower_chain(block_plan.chain)

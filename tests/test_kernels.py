@@ -197,8 +197,15 @@ def test_mlstm_state_continuity_across_chunks():
 # ---------------------------------------------------------------------------
 
 def test_ops_plan_blocks_are_legal():
+    # the Pallas kernels plan against the TPU target explicitly: the
+    # auto-detected process default is the cache-blocked CPU preset on
+    # the test host, whose 1 MiB fast level cannot hold these kernels'
+    # whole-K/N weight panels
+    from repro.core import hw
     from repro.kernels import ops
-    bm, bf = ops.plan_mlp_blocks(4096, 768, 3072, "bfloat16", False, "gelu")
+    bm, bf = ops.plan_mlp_blocks(4096, 768, 3072, "bfloat16", False, "gelu",
+                                 target=hw.TPU_V5E)
     assert 4096 % bm == 0 and 3072 % bf == 0
-    bq, bk = ops.plan_attention_blocks(4096, 4096, 128, "bfloat16")
+    bq, bk = ops.plan_attention_blocks(4096, 4096, 128, "bfloat16",
+                                       target=hw.TPU_V5E)
     assert 4096 % bq == 0 and 4096 % bk == 0

@@ -53,9 +53,12 @@ def _flat(budget: int, flops: float = 1e12) -> hw.Target:
 @pytest.mark.parametrize("target", PRESETS, ids=PRESET_IDS)
 def test_planner_and_roofline_agree_on_compute_time(target):
     """For the same (op, target) the FTL cost model and the roofline's HW
-    view must report the *identical* compute time — both delegate to
-    ``hw.compute_time(flops, Target.flops)``, and this test keeps them
-    from ever diverging again."""
+    view must report the *identical* compute time — both delegate to the
+    shared ``hw`` formulas, and this test keeps them from ever diverging
+    again.  On an engine-carrying target (rv32_npu) the planner prices
+    the per-engine split (``compute_time_by_kind``); the single-rate
+    roofline view then lower-bounds it (the busiest engine can only be
+    slower than everything-at-peak)."""
     g = graph.mlp_graph(m=512, d_model=256, d_ff=1024, dtype="int8")
     group = g.group(0, g.n_ops)
     try:
@@ -66,8 +69,23 @@ def test_planner_and_roofline_agree_on_compute_time(target):
     assert flops == g.total_flops()
     roof = HW.from_target(target)
     assert plan.report.flops == flops
-    assert plan.report.compute_time_s == target.compute_time_s(flops)
-    assert plan.report.compute_time_s == roof.compute_time_s(flops)
+    # this shape's lane dims are all MXU-aligned: no utilization discount
+    assert all(oc.utilization == 1.0 for oc in plan.report.op_compute)
+    by_kind: dict[str, int] = {}
+    for op in group.ops:
+        sizes = {d: c.size for d, c in plan.constraints.items()}
+        by_kind[op.kind] = by_kind.get(op.kind, 0) + op.flops(sizes)
+    assert plan.report.compute_time_s == pytest.approx(
+        target.compute_time_by_kind(by_kind), rel=1e-12)
+    if not target.engines:
+        assert plan.report.compute_time_s == target.compute_time_s(flops)
+        assert plan.report.compute_time_s == roof.compute_time_s(flops)
+    else:
+        # per-engine times partition the work across declared engines
+        assert set(plan.report.per_engine_compute_s) <= {
+            e.name for e in target.engines}
+        assert plan.report.compute_time_s == pytest.approx(
+            max(plan.report.per_engine_compute_s.values()))
     assert roof.peak_flops == target.flops
 
 
@@ -274,6 +292,75 @@ def test_rv32_mlp_stays_fusion_favorable():
     assert chain.schedule != "unfused"
     assert chain.modeled_runtime_s <= unfused.modeled_runtime_s * (1 + 1e-9)
     assert chain.traffic_bytes < unfused.traffic_bytes
+
+
+# ---------------------------------------------------------------------------
+# utilization-discounted compute (MXU lane-utilization factor)
+# ---------------------------------------------------------------------------
+
+class TestLaneUtilization:
+    def test_aligned_tiles_price_at_peak(self):
+        """The pin the ROADMAP item demands: for lane-aligned tiles the
+        discount is exactly 1 — modeled runtime is bit-identical to the
+        undiscounted formula on every preset."""
+        g = graph.gemm_act_graph(m=1024, k=512, n=2048, dtype="int8")
+        for target in hw.presets():
+            try:
+                chain = partition.plan_chain(g, target=target)
+            except InfeasibleError:
+                continue
+            for s in chain.segments:
+                rep = s.plan.report
+                assert all(oc.utilization == 1.0 for oc in rep.op_compute)
+                assert rep.mxu_utilization == 1.0
+                if not target.engines:
+                    assert rep.compute_time_s == \
+                        target.compute_time_s(rep.flops)
+
+    def test_narrow_lane_discounts_compute(self):
+        """A head-dim-64 output lane feeds half a 128-wide MXU: the PV
+        GEMM's compute time doubles, and the discount can only increase
+        modeled runtime, never decrease it."""
+        from repro.core.ftl.cost import lane_utilization
+        g = graph.attention_graph(q_len=1024, kv_len=1024, head_dim=64,
+                                  dtype="bfloat16")
+        chain = partition.plan_fixed(g, (), target=hw.TPU_V5E)
+        rep = chain.segments[0].plan.report
+        by_name = {oc.name: oc for oc in rep.op_compute}
+        # qk's output lane is Tk (1024-tile, aligned); pv's is Dh=64
+        assert by_name["pv"].utilization == pytest.approx(0.5)
+        assert by_name["pv"].seconds == pytest.approx(
+            2 * by_name["pv"].flops / hw.TPU_V5E.flops)
+        assert rep.compute_time_s >= hw.TPU_V5E.compute_time_s(rep.flops)
+        assert rep.mxu_utilization < 1.0
+        # direct check of the factor's shape
+        pv = next(op for op in chain.segments[0].plan.group.ops
+                  if op.name == "pv")
+        assert lane_utilization(pv, {"Dh": 64}) == 0.5
+        assert lane_utilization(pv, {"Dh": 128}) == 1.0
+        assert lane_utilization(pv, {"Dh": 256}) == 1.0
+
+    def test_utilization_monotone_in_lane_tile(self):
+        """min(1, tile/preferred) is monotone non-decreasing — the
+        property the solver's optimistic full-size prune needs."""
+        from repro.core.ftl.cost import lane_utilization
+        from repro.core.ftl.ir import KernelPolicy, TensorSpec, gemm
+        op = gemm("g",
+                  TensorSpec("x", ("M", "K")), TensorSpec("w", ("K", "N")),
+                  TensorSpec("y", ("M", "N")), contract="K",
+                  policy=KernelPolicy())
+        prev = 0.0
+        for tile in (8, 16, 32, 64, 128, 192, 256):
+            u = lane_utilization(op, {"N": tile})
+            assert u >= prev
+            prev = u
+
+    def test_elementwise_never_discounted(self):
+        from repro.core.ftl.cost import lane_utilization
+        from repro.core.ftl.ir import TensorSpec, elementwise
+        op = elementwise("e", [TensorSpec("x", ("M", "N"))],
+                         TensorSpec("y", ("M", "N")))
+        assert lane_utilization(op, {"N": 8}) == 1.0
 
 
 # ---------------------------------------------------------------------------

@@ -66,19 +66,138 @@ class TestTargetBasics:
         assert hash(t) != hash(hw.TPU_V5E)
 
     def test_default_target_override(self):
-        assert hw.default_target().name == "tpu_v5e"
+        # no override: auto-detected from the process's JAX devices
+        # (cpu_cache on the CPU-only test host)
+        detected = hw.detect_target()
+        assert hw.default_target() == detected
         try:
             hw.set_default_target("rv32_l1_l2")
             assert hw.default_target().name == "rv32_l1_l2"
         finally:
             hw.set_default_target(None)
-        assert hw.default_target().name == "tpu_v5e"
+        assert hw.default_target() == detected
 
     def test_assign_homes_spills_big_tensors_deeper(self):
         t = hw.get_target("rv32_l1_l2")
         homes = t.assign_homes({"small": 512 * KB, "big": 9 * MB})
         assert homes["small"].name == "l2"
         assert homes["big"].name == "l3"     # exceeds free L2 -> spill
+
+
+# ---------------------------------------------------------------------------
+# target auto-detection from the JAX device list
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _FakeDev:
+    platform: str
+    device_kind: str = ""
+
+
+class TestDetectTarget:
+    def test_cpu_host_maps_to_cache_blocked_preset(self):
+        assert hw.detect_target([_FakeDev("cpu", "cpu")]) is hw.CPU_CACHE
+
+    def test_tpu_v5e_maps_to_preset(self):
+        for kind in ("TPU v5 lite", "TPU v5e"):
+            assert hw.detect_target([_FakeDev("tpu", kind)]) is hw.TPU_V5E
+
+    def test_tpu_generations_scale_flops(self):
+        v4 = hw.detect_target([_FakeDev("tpu", "TPU v4")])
+        v5p = hw.detect_target([_FakeDev("tpu", "TPU v5p")])
+        v6 = hw.detect_target([_FakeDev("tpu", "TPU v6 lite")])
+        assert v4.name == "tpu_v4" and v4.flops == 275e12
+        assert v5p.name == "tpu_v5p" and v5p.flops > v4.flops
+        assert v6.name == "tpu_v6e" and v6.flops > v5p.flops
+        # all well-formed planning targets (fast + backing, DMA-fed VMEM)
+        for t in (v4, v5p, v6):
+            assert t.fast.name == "vmem" and t.fast.buffer_depth == 2
+            assert len(t.levels) == 3
+
+    def test_unknown_platform_falls_back_to_v5e(self):
+        assert hw.detect_target([_FakeDev("gpu", "NVIDIA H100")]) \
+            is hw.TPU_V5E
+        assert hw.detect_target([]) is hw.TPU_V5E
+
+    def test_default_target_uses_detection(self, monkeypatch):
+        """default_target resolution: set_default_target override, then
+        FTL_TARGET, then the (memoized) device detection."""
+        monkeypatch.setattr(hw, "_DETECTED",
+                            [hw.detect_target([_FakeDev("tpu", "TPU v4")])])
+        monkeypatch.setattr(hw, "_DEFAULT", [None])
+        monkeypatch.delenv("FTL_TARGET", raising=False)
+        assert hw.default_target().name == "tpu_v4"
+        monkeypatch.setenv("FTL_TARGET", "rv32_l1_l2")
+        assert hw.default_target().name == "rv32_l1_l2"
+        hw.set_default_target("cpu_cache")
+        try:
+            assert hw.default_target().name == "cpu_cache"
+        finally:
+            hw.set_default_target(None)
+
+    def test_detection_memoized_once(self, monkeypatch):
+        calls = []
+
+        def fake_detect(devices=None):
+            calls.append(1)
+            return hw.CPU_CACHE
+
+        monkeypatch.setattr(hw, "_DETECTED", [None])
+        monkeypatch.setattr(hw, "detect_target", fake_detect)
+        monkeypatch.delenv("FTL_TARGET", raising=False)
+        hw.default_target()
+        hw.default_target()
+        assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# engines: per-op-kind compute rates
+# ---------------------------------------------------------------------------
+
+class TestEngines:
+    def test_rv32_npu_preset(self):
+        t = hw.get_target("rv32_npu")
+        assert [lv.name for lv in t.levels] == ["l1", "l2", "l3"]
+        assert {e.name for e in t.engines} == {"npu", "cluster"}
+        assert t.engine_rate("gemm") == ("npu", 128e9)
+        assert t.engine_rate("elementwise") == ("cluster", 0.3e9)
+
+    def test_engineless_target_runs_everything_on_core(self):
+        assert hw.TPU_V5E.engine_rate("gemm") == ("core", hw.TPU_V5E.flops)
+        assert hw.TPU_V5E.compute_time_by_kind({"gemm": 2e12, "x": 1e12}) \
+            == hw.TPU_V5E.compute_time_s(3e12)
+
+    def test_engines_overlap_one_engine_serializes(self):
+        t = hw.get_target("rv32_npu")
+        mix = {"gemm": 128e9, "elementwise": 0.3e9}
+        # one second of work per engine: overlapped => 1 s, not 2
+        assert t.compute_time_by_kind(mix) == pytest.approx(1.0)
+        times = t.engine_times(mix)
+        assert times["npu"] == pytest.approx(1.0)
+        assert times["cluster"] == pytest.approx(1.0)
+
+    def test_unroutable_kind_raises_without_catch_all(self):
+        t = dataclasses.replace(
+            hw.RV32_NPU,
+            engines=(hw.Engine("npu", (("gemm", 128e9),)),))
+        with pytest.raises(ValueError, match="catch-all"):
+            t.engine_rate("elementwise")
+
+    def test_engines_survive_derived_targets(self):
+        t = hw.RV32_NPU.with_fast_capacity(512 * KB).with_buffer_depth(3)
+        assert {e.name for e in t.engines} == {"npu", "cluster"}
+
+    def test_hw_profiles_collapse_onto_engines(self):
+        """The benchmark profiles' macs/ew split is the shared Engine
+        model now: NPU profiles overlap the two kinds, cluster-only
+        profiles serialize them on one engine."""
+        from benchmarks import hw_profiles as hp
+        npu = hp.SIRACUSA_NPU.target()
+        clu = hp.SIRACUSA_CLUSTER.target()
+        mix = {"gemm": 2.0 * 64e9, "elementwise": 0.3e9}   # 1 s each
+        assert npu.compute_time_by_kind(mix) == pytest.approx(1.0)
+        mix_c = {"gemm": 2.0 * 3e9, "elementwise": 0.3e9}
+        assert clu.compute_time_by_kind(mix_c) == pytest.approx(2.0)
 
 
 # ---------------------------------------------------------------------------
@@ -209,7 +328,8 @@ def test_model_block_plan_cache_keys_target():
 class TestTargetQualification:
     def test_pallas_requires_vmem_class_target(self):
         """A plan made for a KiB-scale scratchpad must not bind the Pallas
-        kernels even on a TPU host — its tiles assume another machine."""
+        kernels even on a TPU host — its tiles assume another machine.
+        (Shape-less contexts fall back to the capacity-class check.)"""
         ctx = registry.ExecContext(kind="mlp", platform="tpu",
                                    schedule="fused",
                                    target=hw.get_target("rv32_l1_l2"))
@@ -217,6 +337,93 @@ class TestTargetQualification:
         ctx = registry.ExecContext(kind="mlp", platform="tpu",
                                    schedule="fused", target=hw.TPU_V5E)
         assert registry.find("mlp", ctx).name == "pallas_fused_mlp"
+
+    def test_pallas_mlp_qualifies_by_kernel_tile_footprint(self):
+        """With shapes in the context, qualification solves the kernel's
+        own dataflow (K/N whole) on the plan target: a weight panel that
+        cannot fit the fast level disqualifies the kernel even on a
+        VMEM-class target — where the old capacity-class check would
+        have happily bound it."""
+        small_vmem = hw.TPU_V5E.with_fast_capacity(8 * MB)
+        assert registry._vmem_class(small_vmem)       # old check: fine
+        big = registry.ExecContext(
+            kind="mlp", platform="tpu", schedule="fused",
+            m=8192, d_model=8192, d_ff=32768, dtype="bfloat16",
+            target=small_vmem)
+        # w1 alone is 8192*32768*2 B = 512 MiB >> 8 MiB: must fall back
+        assert registry.find("mlp", big).name == "xla_scan_mlp"
+        ok = registry.ExecContext(
+            kind="mlp", platform="tpu", schedule="fused",
+            m=4096, d_model=256, d_ff=1024, dtype="bfloat16",
+            target=small_vmem)
+        assert registry.find("mlp", ok).name == "pallas_fused_mlp"
+        # and the rv32 scratchpad fails the footprint probe with shapes
+        rv = registry.ExecContext(
+            kind="mlp", platform="tpu", schedule="fused",
+            m=4096, d_model=768, d_ff=3072, dtype="bfloat16",
+            target=hw.get_target("rv32_l1_l2"))
+        assert registry.find("mlp", rv).name == "xla_scan_mlp"
+
+    def test_partial_mlp_probes_per_gemm_footprint(self):
+        """The partial Pallas path runs its two GEMM kernels
+        sequentially, one weight panel each: shapes whose *fused*
+        whole-K/N solve cannot fit must still qualify the partial
+        executor when each GEMM alone is plannable."""
+        small_vmem = hw.TPU_V5E.with_fast_capacity(8 * MB)
+        ctx = registry.ExecContext(
+            kind="mlp", platform="tpu", schedule="partial",
+            m=4096, d_model=16384, d_ff=16384, dtype="bfloat16",
+            target=small_vmem)
+        # fused probe fails (whole-K weight columns alone overflow)...
+        assert not registry._mlp_kernel_footprint_fits(
+            4096, 16384, 16384, "bfloat16", False, "gelu", small_vmem)
+        # ...but the per-GEMM partial probe qualifies the kernel
+        assert registry.find("mlp", ctx).name == "pallas_partial_mlp"
+
+    def test_kernel_block_planning_survives_cpu_default_target(self):
+        """ops.plan_*_blocks with target=None must not solve against the
+        auto-detected cpu_cache default (whose 1 MiB fast level cannot
+        hold the kernels' weight panels): a non-VMEM-class process
+        default falls back to the TPU preset."""
+        from repro.kernels import ops
+        assert ops._kernel_target(None).fast.capacity_bytes >= 4 * MB
+        try:
+            hw.set_default_target("cpu_cache")
+            assert ops._kernel_target(None) is hw.TPU_V5E
+            assert ops.plan_mlp_blocks(
+                4096, 768, 3072, "bfloat16", False, "gelu") == \
+                ops.plan_mlp_blocks(4096, 768, 3072, "bfloat16", False,
+                                    "gelu", target=hw.TPU_V5E)
+            hw.set_default_target("rv32_npu")
+            assert ops._kernel_target(None) is hw.TPU_V5E
+            hw.set_default_target("tpu_v5e")
+            assert ops._kernel_target(None) is hw.TPU_V5E
+        finally:
+            hw.set_default_target(None)
+
+    def test_pallas_attention_qualifies_by_kernel_tile_footprint(self):
+        rv = registry.ExecContext(
+            kind="attention", platform="tpu", schedule="fused",
+            m=4096, head_dim=128, dtype="bfloat16",
+            target=hw.get_target("rv32_l1_l2"))
+        assert registry.find("attention", rv).name == "xla_ref_attention"
+        tpu = registry.ExecContext(
+            kind="attention", platform="tpu", schedule="fused",
+            m=4096, head_dim=128, dtype="bfloat16", target=hw.TPU_V5E)
+        assert registry.find("attention", tpu).name == \
+            "pallas_flash_attention"
+
+    def test_plan_block_context_carries_head_dim(self):
+        cfg = dataclasses.replace(configs.get_config("llama3.2-3b")
+                                  .reduced(),
+                                  dtype="float32", remat=False,
+                                  ftl_mode="auto")
+        plan = registry.plan_block(cfg, m=32, dtype="float32",
+                                   target=hw.TPU_V5E)
+        # requalification context exposes the head dim for the probe
+        from repro.core.ftl import executor_block as eb
+        ctx = eb._runtime_ctx(plan, "attention", "fused", 32, "float32")
+        assert ctx.head_dim == cfg.resolved_head_dim
 
     def test_run_block_executors_bound_to_plan_target(self):
         """Every resolved stage executor must run pinned to the plan's own
