@@ -1,0 +1,149 @@
+"""Simulator-in-the-loop autotuning sweep (the ``repro.tune`` tentpole
+artifact + CI gate).
+
+For every ``repro.core.hw`` preset this plans the paper's ViT-MLP
+benchmark op (GEMM→GeLU, int8) and a zoo transformer block twice: the
+analytic argmin (``partition.plan_chain``) and the DES-scored autotuner
+(``repro.tune.autotune_chain`` — beam search over the analytic top-k
+shortlist × tile sizes × per-level buffer depths × engine assignment,
+every candidate replayed through the discrete-event simulator).  Rows
+report both simulated runtimes, the improvement, the replay budget
+spent, and what the tuner changed (target depth suffix, cuts).
+
+Writes ``BENCH_autotune.json`` (uploaded by the CI bench-smoke job).
+
+**CI gates** (or the run fails, naming the offending preset):
+
+* *tuned-never-worse*: on **every** preset × workload the tuned plan's
+  simulated runtime must be ≤ the analytic-best plan's simulated
+  runtime (the analytic plan is a search seed, so a regression means
+  the tuner lost a plan it was handed);
+* *strictly-better-somewhere*: at least one preset × workload must
+  improve strictly — the search must actually buy something, otherwise
+  the simulator scoring is dead weight.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core import hw
+from repro.core.ftl import graph
+from repro.tune import AutotuneConfig, autotune_chain
+
+from ._smoke import smoke
+
+OUT = "BENCH_autotune.json"
+
+# paper ViT-Base MLP first half: d=768, d_ff=3072, int8
+D_MODEL, D_FF = 768, 3072
+DTYPE = "int8"
+
+
+def _m() -> int:
+    return 256 if smoke() else 3072
+
+
+def _config() -> AutotuneConfig:
+    if smoke():
+        return AutotuneConfig(top_k_partitions=2, top_k_tiles=2,
+                              beam_width=3, max_rounds=2, max_sims=96)
+    return AutotuneConfig()
+
+
+def _tune_row(g, target: hw.Target, config: AutotuneConfig) -> dict:
+    t0 = time.perf_counter()
+    res = autotune_chain(g, target=target, config=config)
+    wall_ms = round(1e3 * (time.perf_counter() - t0), 1)
+    gate = (hw.round_time(res.sim_runtime_s)
+            <= hw.round_time(res.baseline_sim_runtime_s))
+    return {
+        "graph": g.name,
+        "analytic_best_sim_ms": 1e3 * res.baseline_sim_runtime_s,
+        "tuned_sim_ms": 1e3 * res.sim_runtime_s,
+        "tuned_analytic_ms": 1e3 * res.chain.modeled_runtime_s,
+        "improvement_%": round(100 * res.improvement, 3),
+        "improved": res.improved,
+        "n_scored": res.n_scored,
+        "n_feasible": res.n_feasible,
+        "tuned_target": res.chain.target.name,
+        "baseline_cuts": list(res.baseline_chain.cuts()),
+        "tuned_cuts": list(res.chain.cuts()),
+        "tune_wall_ms": wall_ms,
+        "gate_tuned_ok": gate,
+    }
+
+
+def target_row(target: hw.Target, m: int, config: AutotuneConfig) -> dict:
+    g = graph.gemm_act_graph(m=m, k=D_MODEL, n=D_FF, dtype=DTYPE)
+    row = _tune_row(g, target, config)
+    return {"target": target.name, "paper_op": {"m": m, "d_model": D_MODEL,
+                                                "d_ff": D_FF, "dtype": DTYPE,
+                                                **row}}
+
+
+def block_rows(m: int, config: AutotuneConfig) -> list[dict]:
+    """One zoo block per preset: multi-segment chains with repeats."""
+    import dataclasses
+
+    from repro import configs
+    cfg = dataclasses.replace(configs.get_config("llama3.2-3b").reduced(),
+                              dtype="float32", remat=False)
+    g = graph.block_graph(cfg, m=m, dtype="float32")
+    return [{"arch": cfg.name, "m": m, "target": t.name,
+             **_tune_row(g, t, config)}
+            for t in hw.presets()]
+
+
+def run() -> dict:
+    m = _m()
+    config = _config()
+    return {
+        "smoke": smoke(),
+        "m": m,
+        "config": {
+            "top_k_partitions": config.top_k_partitions,
+            "top_k_tiles": config.top_k_tiles,
+            "beam_width": config.beam_width,
+            "max_rounds": config.max_rounds,
+            "max_sims": config.max_sims,
+            "depth_candidates": list(config.depth_candidates),
+        },
+        "gate": "tuned simulated runtime <= analytic-best simulated "
+                "runtime on every preset x workload, strictly better on "
+                "at least one",
+        "targets": [target_row(t, m, config) for t in hw.presets()],
+        "zoo_block": block_rows(32 if smoke() else 128, config),
+    }
+
+
+def main() -> None:
+    result = run()
+    rows = ([(r["target"], r["paper_op"]) for r in result["targets"]]
+            + [(f"{r['target']}/{r['arch']}", r)
+               for r in result["zoo_block"]])
+    for label, r in rows:
+        print(f"{label}: tuned sim {r['tuned_sim_ms']:.3f} ms vs "
+              f"analytic-best sim {r['analytic_best_sim_ms']:.3f} ms "
+              f"({r['improvement_%']:+.2f}%, {r['n_scored']} replays, "
+              f"target {r['tuned_target']}, "
+              f"tune {r['tune_wall_ms']} ms)")
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {OUT}")
+    bad = [label for label, r in rows if not r["gate_tuned_ok"]]
+    if bad:
+        raise RuntimeError(
+            f"autotune gate FAILED on {bad}: the tuned plan's simulated "
+            f"runtime exceeds the analytic-best plan's — the analytic "
+            f"plan is a search seed, so the tuner lost a plan it was "
+            f"handed")
+    if not any(r["improved"] for _, r in rows):
+        raise RuntimeError(
+            "autotune gate FAILED: no preset/workload improved strictly "
+            "over the analytic plan — the DES-scored search bought "
+            "nothing anywhere")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,15 +23,17 @@ def _write_status(results: list[dict]) -> None:
 
 
 def main() -> None:
-    from . import (bench_attention, bench_block, bench_paper_mlp,
-                   bench_roofline, bench_schedule, bench_solver,
-                   bench_targets, bench_tpu_mlp)
+    from . import (bench_attention, bench_autotune, bench_block,
+                   bench_paper_mlp, bench_roofline, bench_schedule,
+                   bench_solver, bench_targets, bench_tpu_mlp)
 
     sections = [
         ("targets: per-level traffic across memory hierarchies + gate",
          bench_targets.main),
         ("schedule-sim: tile-level DES replay vs analytic roofline + gate",
          bench_schedule.main),
+        ("autotune: DES-scored search vs analytic argmin + gate",
+         bench_autotune.main),
         ("paper-fig3: ViT MLP layer-per-layer vs FTL (Siracusa profiles)",
          bench_paper_mlp.main),
         ("ftl-at-scale: fused-vs-unfused MLP per assigned arch (TPU v5e)",

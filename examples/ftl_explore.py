@@ -11,8 +11,13 @@ discrete-event simulator (sim vs analytic runtime, overlap efficiency),
 and ``--timeline`` prints the first tile steps of the replayed schedule
 event by event.
 
+``--autotune`` reruns the chosen plan through the simulator-in-the-loop
+tuner (``repro.tune``); ``--trace out.json`` exports the replayed
+timeline as Chrome-tracing JSON — open it at https://ui.perfetto.dev.
+
 Run:  PYTHONPATH=src python examples/ftl_explore.py [--m 8192] [--d 4096]
-      [--f 11008] [--target rv32_npu] [--timeline]
+      [--f 11008] [--target rv32_npu] [--timeline] [--autotune]
+      [--trace out.json]
 """
 import argparse
 
@@ -47,6 +52,12 @@ def main() -> None:
     ap.add_argument("--timeline", action="store_true",
                     help="print the replayed event timeline of the chosen "
                          "plan on --target")
+    ap.add_argument("--autotune", action="store_true",
+                    help="DES-tune the chosen plan on --target "
+                         "(tile sizes x buffer depths x engines)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write the replayed timeline on --target as "
+                         "Chrome-tracing JSON (Perfetto-viewable)")
     args = ap.parse_args()
 
     g = graph.mlp_graph(m=args.m, d_model=args.d, d_ff=args.f,
@@ -107,11 +118,22 @@ def main() -> None:
     print("\ngraph partitioner (tpu_v5e):")
     print(chain.summary())
 
+    chosen = partition.plan_chain(g, target=base)
+    if args.autotune:
+        from repro import tune
+        res = tune.autotune_chain(g, target=base)
+        print(f"\n{res.summary()}")
+        chosen = res.chain
+
     if args.timeline:
-        chosen = partition.plan_chain(g, target=base)
-        print(f"\nreplayed schedule on {base.name} "
+        print(f"\nreplayed schedule on {chosen.target.name} "
               f"(first steps, {chosen.schedule}):")
         print(sim.chain_timeline(chosen, max_steps=2))
+
+    if args.trace:
+        sim.write_chrome_trace(chosen, args.trace)
+        print(f"\nwrote Chrome trace to {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
 
     if args.arch:
         from repro import configs

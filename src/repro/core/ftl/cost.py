@@ -102,6 +102,8 @@ class CostReport:
         default_factory=dict)           # level name -> DMA count
     tensor_homes: dict[str, str] = dataclasses.field(
         default_factory=dict)           # tensor name -> home level name
+    tensor_depths: dict[str, int] = dataclasses.field(
+        default_factory=dict)           # tensor name -> staging depth
     op_compute: tuple[OpCompute, ...] = ()
     per_engine_compute_s: dict[str, float] = dataclasses.field(
         default_factory=dict)           # engine name -> serialized seconds
@@ -150,6 +152,7 @@ def vmem_usage(
     cons: Mapping[str, DimConstraint],
     *,
     buffer_depth: int = 2,
+    depths: Mapping[str, int] | None = None,
 ) -> int:
     """Peak fast-memory footprint of a tile assignment.
 
@@ -157,21 +160,47 @@ def vmem_usage(
     ``buffer_depth`` tile buffers — the staging pipeline of the target's
     fast level (``Target.fast.buffer_depth``): 1 when a hardware cache
     does the prefetching, 2 for classic DMA double-buffering, 3+ for
-    deeper pipelines.  Fused-away intermediates and accumulators live
+    deeper pipelines.  ``depths`` overrides the charge per tensor name —
+    the backing-level-aware ``max(fast.depth, home.depth)`` staging
+    (:func:`staging_depths`); tensors it does not name fall back to
+    ``buffer_depth``.  Fused-away intermediates and accumulators live
     single-buffered (produced and consumed in-core).
     """
     if buffer_depth < 1:
         raise ValueError(f"buffer_depth must be >= 1, got {buffer_depth}")
+    depths = depths or {}
     total = 0
     for t in group.tensors.values():
         b = t.bytes_tile(tiles)
         if t.role in (Role.INPUT, Role.WEIGHT, Role.OUTPUT):
-            total += b * buffer_depth
+            total += b * depths.get(t.name, buffer_depth)
         elif t.role is Role.INTERMEDIATE:
             total += b
     for acc in accumulator_tensors(group, tiles, cons):
         total += acc.bytes_tile(tiles)
     return total
+
+
+def staging_depths(
+    group: FusionGroup,
+    cons: Mapping[str, DimConstraint],
+    target: hwlib.Target,
+) -> dict[str, int]:
+    """Per-streamed-tensor staging depth: ``max(fast.depth, home.depth)``
+    (``Target.staging_depth``) at the tensor's home backing level.
+
+    Home levels depend only on the *full* tensor footprints — never on
+    the tile assignment — so the depths are one fixed map per
+    (group, target): the solver computes them once, the feasibility
+    prune stays monotone in tile sizes, and the schedule lowering
+    (``repro.sim.schedule``) reuses the identical map for its buffer-slot
+    hazards.
+    """
+    full_sizes = {d: cons[d].size for d in cons}
+    footprints = {t.name: t.bytes_full(full_sizes)
+                  for t in group.hbm_tensors()}
+    homes = target.assign_homes(footprints)
+    return {n: target.staging_depth(lv) for n, lv in homes.items()}
 
 
 def lane_utilization(op: OpNode, tiles: Mapping[str, int]) -> float:
@@ -201,6 +230,7 @@ def compute_costs(
     tiles: Mapping[str, int],
     full_sizes: Mapping[str, int],
     target: hwlib.Target,
+    engine_overrides: Mapping[str, str] | None = None,
 ) -> tuple[tuple[OpCompute, ...], dict[str, float], float]:
     """Per-op / per-engine compute pricing of an assignment.
 
@@ -211,14 +241,27 @@ def compute_costs(
     Engine-less targets collapse to the legacy single-rate formula via
     effective FLOPs (``Σ flops/utilization``), bit-identical to
     ``Target.compute_time_s`` when every tile is lane-aligned.
+
+    ``engine_overrides`` (op kind → engine name, entries drawn from
+    ``Target.engines_for_kind``) pins kinds to specific engines instead
+    of the default fastest-match rule — the autotuner's load-balancing
+    knob: analytically never better than the default (the default picks
+    the fastest engine per kind), but a deliberate slower-engine
+    assignment can win simulated runtime by overlapping with the
+    bottleneck engine.
     """
+    overrides = engine_overrides or {}
     ops: list[OpCompute] = []
     per_engine: dict[str, float] = {}
     eff_total = 0.0
     for op in group.ops:
         f = op.flops(full_sizes)
         util = lane_utilization(op, tiles)
-        engine, rate = target.engine_rate(op.kind)
+        if op.kind in overrides:
+            engine = overrides[op.kind]
+            rate = target.engine_rate_for(op.kind, engine)
+        else:
+            engine, rate = target.engine_rate(op.kind)
         secs = f / (rate * util)
         ops.append(OpCompute(name=op.name, kind=op.kind, engine=engine,
                              flops=f, utilization=util, seconds=secs))
@@ -257,6 +300,7 @@ def evaluate(
     *,
     target: hwlib.Target | None = None,
     order: Sequence[str] | None = None,
+    engine_overrides: Mapping[str, str] | None = None,
 ) -> CostReport:
     """Cost of an assignment on ``target`` (None → the default target).
 
@@ -264,7 +308,8 @@ def evaluate(
     over the tiled dims (contract dims pinned inner), minimizing modeled
     runtime with (traffic, DMA count) as the tie-break — compute time is
     order-invariant, so in the compute-bound regime the order with the
-    fewest bytes wins.
+    fewest bytes wins.  ``engine_overrides`` pins op kinds to specific
+    engines (see :func:`compute_costs`).
     """
     target = target if target is not None else hwlib.default_target()
     counts = {d: n_tiles(cons[d].size, tiles[d]) for d in tiles}
@@ -276,6 +321,7 @@ def evaluate(
     full_sizes = {d: cons[d].size for d in cons}
     footprints = {t.name: t.bytes_full(full_sizes) for t in hbm}
     homes = target.assign_homes(footprints)
+    depths = {n: target.staging_depth(lv) for n, lv in homes.items()}
     # fixed per-tensor weights: home levels depend only on full tensor
     # sizes, so the modeled time stays monotone in tile sizes and the
     # solver's optimistic full-size prune remains a valid lower bound.
@@ -315,7 +361,7 @@ def evaluate(
     # compute term must cover the same per-shard work the transfer term
     # does or sharded plans would look spuriously compute-bound.
     op_costs, per_engine, compute_s = compute_costs(
-        group, tiles, full_sizes, target)
+        group, tiles, full_sizes, target, engine_overrides)
     flops = sum(oc.flops for oc in op_costs)
 
     if order is None:
@@ -345,8 +391,10 @@ def evaluate(
     return CostReport(
         traffic_bytes=tot,
         dma_transfers=dma,
-        vmem_bytes=vmem_usage(group, tiles, cons,
-                              buffer_depth=target.fast.buffer_depth),
+        vmem_bytes=vmem_usage(
+            group, tiles, cons,
+            buffer_depth=target.fast.buffer_depth,
+            depths=depths),
         grid=tuple((d, counts[d]) for d in ordr),
         per_tensor_traffic=per,
         macs=group.total_macs(),
@@ -359,6 +407,7 @@ def evaluate(
         per_level_traffic=lvl_bytes,
         per_level_transfers=lvl_dma,
         tensor_homes={n: lv.name for n, lv in homes.items()},
+        tensor_depths=depths,
         op_compute=op_costs,
         per_engine_compute_s=per_engine,
     )

@@ -290,6 +290,79 @@ def plan_chain(
     return _plan_chain_cached(graph, target, _freeze(sharded_sizes))
 
 
+@functools.lru_cache(maxsize=64)
+def _plan_chain_top_k_cached(
+    graph: OpGraph, target: hwlib.Target, sharded: tuple | None, k: int
+) -> tuple[ChainPlan, ...]:
+    n = graph.n_ops
+    seg: dict[tuple[int, int], Segment | None] = {}
+    for lo in range(n):
+        for hi in range(lo + 1, n + 1):
+            if graph.crosses_barrier(lo, hi):
+                continue
+            seg[(lo, hi)] = _solve_segment(graph, lo, hi, target, sharded)
+
+    def ckey(key: tuple) -> tuple:
+        return (hwlib.round_time(key[0]),) + key[1:]
+
+    # k-best DP: best[i] holds up to k (key, segments) entries for the
+    # prefix ops[0:i], ordered by the same rounded-runtime key as
+    # plan_chain.  Per-prefix truncation is exact for an additive
+    # objective (the j-th best plan of a prefix extends an ≤ j-th best
+    # plan of a shorter prefix).  Candidates are generated rank-major
+    # (every prefix-entry-0 composition, lo-ascending, before any
+    # entry-1 composition) and ranked with a *stable* sort, so entry 0
+    # ties exactly like plan_chain's lo-ascending strict-< incumbent
+    # rule — entry 0 of the result is always the plan plan_chain
+    # returns.  Entries of one prefix have pairwise-distinct cut sets by
+    # construction (distinct (lo, prefix-entry) pairs extend to distinct
+    # cut sets).
+    best: list[list[tuple[tuple, tuple[Segment, ...]]]]
+    best = [[] for _ in range(n + 1)]
+    best[0] = [((0.0, 0, 0, 0), ())]
+    for hi in range(1, n + 1):
+        cands: list[tuple[tuple, tuple[Segment, ...]]] = []
+        for rank in range(k):
+            for lo in range(hi):
+                s = seg.get((lo, hi))
+                if s is None or rank >= len(best[lo]):
+                    continue
+                (pt, ptr, pd, pn), psegs = best[lo][rank]
+                key = (pt + s.modeled_runtime_s, ptr + s.traffic_bytes,
+                       pd + s.dma_transfers, pn + 1)
+                cands.append((key, psegs + (s,)))
+        cands.sort(key=lambda e: ckey(e[0]))
+        best[hi] = cands[:k]
+    if not best[n]:
+        raise InfeasibleError(
+            f"graph {graph.name}: no partition fits the "
+            f"{target.fast_capacity} B {target.fast.name} of target "
+            f"{target.name}"
+        )
+    return tuple(
+        ChainPlan(graph=graph, segments=segs, target=target)
+        for _, segs in best[n]
+    )
+
+
+def plan_chain_top_k(
+    graph: OpGraph,
+    *,
+    target: hwlib.Target | None = None,
+    sharded_sizes: Mapping[str, int] | None = None,
+    k: int = 1,
+) -> tuple[ChainPlan, ...]:
+    """The ``k`` best fusion partitions of ``graph`` on ``target``,
+    best-first under :func:`plan_chain`'s exact objective — the
+    autotuner's analytic shortlist.  Entry 0 is always the partition
+    :func:`plan_chain` returns; fewer than ``k`` feasible partitions
+    return them all."""
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    target = target if target is not None else hwlib.default_target()
+    return _plan_chain_top_k_cached(graph, target, _freeze(sharded_sizes), k)
+
+
 def plan_fixed(
     graph: OpGraph,
     cuts: Iterable[int],

@@ -400,6 +400,11 @@ class BlockPlan:
     cfg: object = None
     m: int = 0
     dtype: str = ""
+    # set when the plan came out of the DES-scored autotuner
+    # (repro.tune.TuneResult); the chain above is then the tuned chain
+    # and chain.target may be a depth-modified variant of the request's
+    # target.
+    tune: object = None
 
     @property
     def target(self) -> hwlib.Target:
@@ -461,11 +466,22 @@ def _freeze(d: Mapping[str, int] | None):
 @functools.lru_cache(maxsize=128)
 def _plan_block_cached(cfg, m: int, dtype: str | None,
                        target: hwlib.Target, sharded: tuple | None,
-                       plat: str, residual: bool) -> BlockPlan:
+                       plat: str, residual: bool,
+                       autotune=None) -> BlockPlan:
     g = graph.block_graph(cfg, m=m, dtype=dtype, residual=residual)
-    chain = partition.plan_chain(
-        g, target=target,
-        sharded_sizes=dict(sharded) if sharded else None)
+    sharded_d = dict(sharded) if sharded else None
+    tune_result = None
+    if autotune is not None:
+        from repro.tune import autotune_chain  # lazy: pulls in repro.sim
+        tune_result = autotune_chain(g, target=target, config=autotune,
+                                     sharded_sizes=sharded_d)
+        chain = tune_result.chain
+        # bindings qualify against the tuned hierarchy (possibly
+        # depth-modified), the one the chain was scored on
+        target = chain.target
+    else:
+        chain = partition.plan_chain(g, target=target,
+                                     sharded_sizes=sharded_d)
     shell = BlockPlan(chain=chain, bindings=(), platform=plat, cfg=cfg,
                       m=m, dtype=dtype or cfg.dtype)
     sub = {"mlp": shell.mlp_schedule, "attention": shell.attention_schedule}
@@ -485,7 +501,8 @@ def _plan_block_cached(cfg, m: int, dtype: str | None,
         bindings.append(GroupBinding(segment=seg, kind=kind,
                                      executor=find(kind, ctx).name))
     return BlockPlan(chain=chain, bindings=tuple(bindings), platform=plat,
-                     cfg=cfg, m=m, dtype=dtype or cfg.dtype)
+                     cfg=cfg, m=m, dtype=dtype or cfg.dtype,
+                     tune=tune_result)
 
 
 def plan_block(
@@ -496,13 +513,22 @@ def plan_block(
     target: hwlib.Target | None = None,
     sharded_sizes: Mapping[str, int] | None = None,
     residual: bool = True,
+    autotune=None,
 ) -> BlockPlan:
     """Plan one transformer block of ``cfg`` at ``m`` tokens on ``target``
     (None → the default target) and bind every planned fusion group to the
-    best qualifying executor."""
+    best qualifying executor.
+
+    ``autotune`` (a :class:`repro.tune.AutotuneConfig`) swaps the analytic
+    argmin for the simulator-scored search: the returned plan's chain is
+    the DES-runtime-optimal candidate (simulated runtime ≤ the analytic
+    plan's, by construction) and ``BlockPlan.tune`` carries the full
+    :class:`~repro.tune.TuneResult`.  The config is part of the plan
+    cache key — tuned and untuned plans never alias."""
     target = target if target is not None else hwlib.default_target()
     return _plan_block_cached(cfg, m, dtype, target,
-                              _freeze(sharded_sizes), platform(), residual)
+                              _freeze(sharded_sizes), platform(), residual,
+                              autotune)
 
 
 # ---------------------------------------------------------------------------

@@ -32,7 +32,13 @@ from typing import Mapping
 from repro.core import hw as hwlib
 
 from .constraints import build_dim_constraints
-from .cost import CostReport, evaluate, min_traffic_bound, vmem_usage
+from .cost import (
+    CostReport,
+    evaluate,
+    min_traffic_bound,
+    staging_depths,
+    vmem_usage,
+)
 from .ir import FusionGroup
 from .plan import TilePlan
 
@@ -43,28 +49,45 @@ class InfeasibleError(RuntimeError):
 
 @dataclasses.dataclass
 class _SearchState:
-    best_key: tuple | None = None
-    best_tiles: dict | None = None
-    best_report: CostReport | None = None
+    # up to k incumbents, sorted ascending by (key, seq); seq is the
+    # insertion counter, so ties keep the earlier-found assignment —
+    # exactly the strict-< incumbent rule of the k=1 search.
+    best: list[tuple[tuple, int, dict, CostReport]] = \
+        dataclasses.field(default_factory=list)
     nodes: int = 0
+    seq: int = 0
 
 
-def solve(
+def solve_top_k(
     group: FusionGroup,
     *,
     target: hwlib.Target | None = None,
     sharded_sizes: Mapping[str, int] | None = None,
     whole_dims: frozenset[str] = frozenset(),
-) -> TilePlan:
-    """Plan tiling for ``group`` on ``target`` (None → the default target);
-    returns the optimal :class:`TilePlan`."""
+    k: int = 1,
+) -> list[TilePlan]:
+    """The ``k`` best tile assignments for ``group`` on ``target``,
+    best-first (the autotuner's analytic shortlist).
+
+    Same exact branch-and-bound as :func:`solve` — the optimality prune
+    merely compares the optimistic subtree bound against the *worst*
+    incumbent once ``k`` plans are held, so entry 0 is always the plan
+    :func:`solve` returns and the list is the true top-k (no heuristic
+    truncation).  Fewer than ``k`` feasible assignments return them all;
+    zero raises :class:`InfeasibleError`.
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
     target = target if target is not None else hwlib.default_target()
     budget = target.fast_capacity
-    depth = target.fast.buffer_depth
     group.validate()
     cons = build_dim_constraints(
         group, sharded_sizes=sharded_sizes, whole_dims=whole_dims
     )
+    # Per-tensor staging depths are tile-independent (homes follow full
+    # footprints only), so one map serves every probe and the prunes
+    # stay exact.
+    depths = staging_depths(group, cons, target)
     names = sorted(
         cons,
         # Put large dims first: their candidate choice constrains the fast
@@ -79,10 +102,12 @@ def solve(
             return
         key = (rep.modeled_runtime_s, rep.traffic_bytes, rep.dma_transfers,
                rep.n_steps)
-        if state.best_key is None or key < state.best_key:
-            state.best_key = key
-            state.best_tiles = dict(tiles)
-            state.best_report = rep
+        if len(state.best) == k and key >= state.best[-1][0]:
+            return
+        state.seq += 1
+        state.best.append((key, state.seq, dict(tiles), rep))
+        state.best.sort(key=lambda e: (e[0], e[1]))
+        del state.best[k:]
 
     def dfs(i: int, tiles: dict[str, int]) -> None:
         state.nodes += 1
@@ -97,12 +122,12 @@ def solve(
             probe = dict(tiles)
             for j in range(i + 1, len(names)):
                 probe[names[j]] = cons[names[j]].candidates[0]
-            if vmem_usage(group, probe, cons, buffer_depth=depth) > budget:
+            if vmem_usage(group, probe, cons, depths=depths) > budget:
                 # candidates ascend; larger c only makes it worse.
                 del tiles[name]
                 break
             # --- optimality prune: remaining dims at FULL size (optimistic).
-            if state.best_key is not None:
+            if len(state.best) == k:
                 opt = dict(tiles)
                 for j in range(i + 1, len(names)):
                     opt[names[j]] = cons[names[j]].size
@@ -111,27 +136,45 @@ def solve(
                 # tiles grow and steps >= 1, so the optimistic full-size
                 # key bounds every leaf's key from below component-wise —
                 # hence lexicographically.  A subtree whose bound cannot
-                # strictly beat the incumbent is dead (ties keep the
-                # earlier incumbent anyway).
+                # strictly beat the worst held incumbent is dead (ties
+                # keep the earlier incumbent anyway).
                 opt_key = (rep.modeled_runtime_s, rep.traffic_bytes,
                            rep.dma_transfers, 1)
-                if opt_key >= state.best_key:
+                if opt_key >= state.best[-1][0]:
                     continue
             dfs(i + 1, tiles)
         tiles.pop(name, None)
 
     dfs(0, {})
-    if state.best_tiles is None:
+    if not state.best:
         raise InfeasibleError(
             f"group {group.name}: no tile assignment fits the {budget} B "
             f"{target.fast.name} of target {target.name} "
             f"(lower bound traffic {min_traffic_bound(group, cons)} B)"
         )
-    return TilePlan(
-        group=group,
-        tiles=state.best_tiles,
-        constraints=cons,
-        report=state.best_report,
-        target=target,
-        nodes_explored=state.nodes,
-    )
+    return [
+        TilePlan(
+            group=group,
+            tiles=tiles,
+            constraints=cons,
+            report=rep,
+            target=target,
+            nodes_explored=state.nodes,
+        )
+        for _, _, tiles, rep in state.best
+    ]
+
+
+def solve(
+    group: FusionGroup,
+    *,
+    target: hwlib.Target | None = None,
+    sharded_sizes: Mapping[str, int] | None = None,
+    whole_dims: frozenset[str] = frozenset(),
+) -> TilePlan:
+    """Plan tiling for ``group`` on ``target`` (None → the default target);
+    returns the optimal :class:`TilePlan`."""
+    return solve_top_k(
+        group, target=target, sharded_sizes=sharded_sizes,
+        whole_dims=whole_dims, k=1,
+    )[0]

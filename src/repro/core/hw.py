@@ -70,6 +70,14 @@ class MemoryLevel:
     3 for deeper prefetch pipelines.  The cost model charges it per
     streamed tensor instead of a hard-coded ×2, so the solver trades
     pipeline depth against tile size per hierarchy.
+
+    On a *backing* level the field is a staging requirement for tensors
+    homed there: a streamed tensor is charged
+    ``max(fast.buffer_depth, home.buffer_depth)`` buffers
+    (``Target.staging_depth``), so deepening a slow tier buys its
+    tensors a longer prefetch runway at a footprint cost.  Presets
+    declare backing depth 1 (no extra requirement), which makes the max
+    degenerate to the fast depth — the pre-per-level behaviour.
     """
 
     name: str
@@ -211,6 +219,47 @@ class Target:
             levels=(fast,) + self.backing
         )
 
+    def with_level_buffer_depth(self, level: str, depth: int) -> "Target":
+        """This target with the *named* level's pipeline depth replaced —
+        the autotuner's per-level depth knob (``repro.tune``).  For the
+        fast level the depth is the staging-pipeline multiplier; for a
+        backing level it deepens the staging of tensors *homed* there
+        (the cost model charges ``max(fast.depth, home.depth)`` buffers
+        per streamed tensor).  Like :meth:`with_buffer_depth`, a changed
+        depth yields a distinct (differently named, differently hashed)
+        target; the current depth returns ``self``, and re-sweeping the
+        same level replaces its previous ``@<level>dN`` suffix instead of
+        stacking another."""
+        depth = int(depth)
+        by_name = {lv.name: lv for lv in self.levels}
+        if level not in by_name:
+            raise KeyError(
+                f"target {self.name}: no level named {level!r}; levels: "
+                f"{[lv.name for lv in self.levels]}"
+            )
+        if depth == by_name[level].buffer_depth:
+            return self
+        new_levels = tuple(
+            dataclasses.replace(lv, buffer_depth=depth)
+            if lv.name == level else lv
+            for lv in self.levels
+        )
+        parts = [p for p in self.name.split("@")
+                 if not (p.startswith(f"{level}d")
+                         and p[len(level) + 1:].isdigit())]
+        name = "@".join(parts) + f"@{level}d{depth}"
+        return dataclasses.replace(self, name=name, levels=new_levels)
+
+    def staging_depth(self, home: "MemoryLevel") -> int:
+        """Buffers a streamed tensor homed at ``home`` is charged: the
+        deeper of the fast level's pipeline and the home level's staging
+        depth.  A deepened backing level (``with_level_buffer_depth``)
+        buys its tensors a longer prefetch runway; it can never *reduce*
+        the fast level's own pipeline, so with all-default depths this is
+        exactly ``fast.buffer_depth`` (every preset ships backing depths
+        ≤ the fast depth — bit-identical costs)."""
+        return max(self.fast.buffer_depth, home.buffer_depth)
+
     # ------------------------------------------------------------------
     def assign_homes(
         self, footprints: Mapping[str, int]
@@ -281,6 +330,46 @@ class Target:
         raise ValueError(
             f"target {self.name}: no engine runs op kind {kind!r} and "
             f"none advertises a '*' catch-all rate"
+        )
+
+    def engines_for_kind(self, kind: str) -> tuple[str, ...]:
+        """Names of every engine that *can* run ops of ``kind`` (an exact
+        rate or a ``'*'`` catch-all) — the autotuner's assignment domain.
+        Engine-less targets expose the implicit ``'core'`` engine."""
+        if not self.engines:
+            return ("core",)
+        return tuple(
+            e.name for e in self.engines
+            if any(k in (kind, "*") for k, _ in e.rates)
+        )
+
+    def engine_rate_for(self, kind: str, engine: str) -> float:
+        """FLOP/s of ``engine`` running ops of ``kind`` (exact-kind rate
+        wins over its ``'*'`` catch-all).  Raises if the engine cannot
+        run the kind — the autotuner only proposes assignments drawn from
+        :meth:`engines_for_kind`."""
+        if not self.engines:
+            if engine != "core":
+                raise ValueError(
+                    f"target {self.name}: no engine named {engine!r} "
+                    f"(engine-less targets expose only 'core')"
+                )
+            return self.flops
+        for e in self.engines:
+            if e.name != engine:
+                continue
+            rates = dict(e.rates)
+            if kind in rates:
+                return rates[kind]
+            if "*" in rates:
+                return rates["*"]
+            raise ValueError(
+                f"target {self.name}: engine {engine!r} has no rate for "
+                f"op kind {kind!r}"
+            )
+        raise ValueError(
+            f"target {self.name}: no engine named {engine!r}; engines: "
+            f"{[e.name for e in self.engines]}"
         )
 
     def engine_times(self, flops_by_kind: Mapping[str, float]
@@ -375,8 +464,10 @@ TPU_V5E = Target(
     name="tpu_v5e",
     levels=(
         MemoryLevel("vmem", 96 * MB, 2.0e13, buffer_depth=2),
-        MemoryLevel("hbm", int(16e9), 819e9, dma_setup_s=1e-6),
-        MemoryLevel("ici", 1 << 50, 50e9, dma_setup_s=5e-6),
+        MemoryLevel("hbm", int(16e9), 819e9, dma_setup_s=1e-6,
+                    buffer_depth=1),
+        MemoryLevel("ici", 1 << 50, 50e9, dma_setup_s=5e-6,
+                    buffer_depth=1),
     ),
     flops=197e12,
 )
@@ -404,8 +495,9 @@ RV32_L1_L2 = Target(
     name="rv32_l1_l2",
     levels=(
         MemoryLevel("l1", 256 * KB, 8e9, buffer_depth=2),
-        MemoryLevel("l2", 2 * MB, 2.0e9, dma_setup_s=2e-6),
-        MemoryLevel("l3", 512 * MB, 0.35e9, dma_setup_s=2e-6),
+        MemoryLevel("l2", 2 * MB, 2.0e9, dma_setup_s=2e-6, buffer_depth=1),
+        MemoryLevel("l3", 512 * MB, 0.35e9, dma_setup_s=2e-6,
+                    buffer_depth=1),
     ),
     flops=6e9,
 )
@@ -482,8 +574,9 @@ def _tpu_target(device_kind: str) -> Target:
                 levels=(
                     MemoryLevel("vmem", vmem, 2.0e13, buffer_depth=2),
                     MemoryLevel("hbm", int(hbm_bytes), hbm_bw,
-                                dma_setup_s=1e-6),
-                    MemoryLevel("ici", 1 << 50, 50e9, dma_setup_s=5e-6),
+                                dma_setup_s=1e-6, buffer_depth=1),
+                    MemoryLevel("ici", 1 << 50, 50e9, dma_setup_s=5e-6,
+                                buffer_depth=1),
                 ),
                 flops=flops,
             )

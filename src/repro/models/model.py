@@ -212,17 +212,19 @@ def _scan_layers(cfg, stack: Params, kinds: list[str], x, *, positions, ctx,
 
 
 @functools.lru_cache(maxsize=256)
-def _block_plan_cached(cfg, m: int, dtype: str, target):
+def _block_plan_cached(cfg, m: int, dtype: str, target, autotune):
     if cfg.is_moe or cfg.ftl_mode == "off":
         return None
     try:
-        return ftl_registry.plan_block(cfg, m=m, dtype=dtype, target=target)
+        return ftl_registry.plan_block(cfg, m=m, dtype=dtype, target=target,
+                                       autotune=autotune)
     except (ValueError, InfeasibleError):
         return None
 
 
-def _block_plan(cfg, m: int, dtype: str, target=None):
-    """Cached per-(cfg, m, dtype, target) whole-block FTL plan, or None.
+def _block_plan(cfg, m: int, dtype: str, target=None, autotune=None):
+    """Cached per-(cfg, m, dtype, target, autotune) whole-block FTL plan,
+    or None.
 
     The one plan every block of the forward pass executes through
     (``registry.plan_block`` additionally caches per platform).  The
@@ -231,15 +233,18 @@ def _block_plan(cfg, m: int, dtype: str, target=None):
     plan made for a different hierarchy — the Target hashes over its
     full level description, so editing any level field (capacity,
     bandwidth, ``buffer_depth``) is a new cache key (regression-pinned
-    in tests/test_objective.py).  None — and the hand-sequenced
-    path — when there is nothing to plan: ``ftl_mode='off'`` is the full
-    escape hatch (run_block would pin the baseline executors anyway, so
-    skipping the solver at trace time gives the identical compute graph
-    for free), pure SSM stacks have no plannable block, and MoE FFNs
-    route (not a chain).
+    in tests/test_objective.py).  ``autotune`` (a
+    :class:`repro.tune.AutotuneConfig`) is likewise part of the key:
+    a DES-tuned plan and the analytic plan for the same shapes never
+    alias (regression-pinned in tests/test_tune.py).  None — and the
+    hand-sequenced path — when there is nothing to plan:
+    ``ftl_mode='off'`` is the full escape hatch (run_block would pin the
+    baseline executors anyway, so skipping the solver at trace time gives
+    the identical compute graph for free), pure SSM stacks have no
+    plannable block, and MoE FFNs route (not a chain).
     """
     target = target if target is not None else hw.default_target()
-    return _block_plan_cached(cfg, m, dtype, target)
+    return _block_plan_cached(cfg, m, dtype, target, autotune)
 
 
 # ===========================================================================

@@ -32,7 +32,14 @@ from repro.core.hw import Engine  # noqa: F401  (re-export: sim's engine model)
 
 from .des import ChainSimResult, SimResult, simulate, simulate_chain
 from .engine import step_compute_chain
-from .report import chain_timeline, compare_plan, sim_rows, timeline
+from .report import (
+    chain_timeline,
+    compare_plan,
+    sim_rows,
+    timeline,
+    to_chrome_trace,
+    write_chrome_trace,
+)
 from .schedule import (
     Compute,
     DmaIn,
@@ -50,4 +57,5 @@ __all__ = [
     "SimResult", "ChainSimResult", "simulate", "simulate_chain",
     "step_compute_chain",
     "compare_plan", "sim_rows", "timeline", "chain_timeline",
+    "to_chrome_trace", "write_chrome_trace",
 ]

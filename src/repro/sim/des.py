@@ -127,19 +127,24 @@ def simulate(
         else schedule.buffer_depth
     if depth < 1:
         raise ValueError(f"buffer_depth must be >= 1, got {depth}")
-    prefetch = depth - 1
+
+    def _depth(tensor: str) -> int:
+        # per-tensor staging depth (max(fast, home) — the lowering's
+        # cost.staging_depths map); an explicit override is uniform,
+        # replacing every per-tensor depth — the depth-sweep contract.
+        if buffer_depth is not None:
+            return buffer_depth
+        return schedule.tensor_depths.get(tensor, schedule.buffer_depth)
+
     steps = schedule.n_steps
     levels = {lv.name: lv for lv in schedule.target.backing}
 
-    ins_by: dict[int, list[DmaIn]] = {}
     comp_by: dict[int, list[Compute]] = {}
     outs_by: dict[int, list] = {}
     for ev in schedule.events:
-        if isinstance(ev, DmaIn):
-            ins_by.setdefault(ev.step, []).append(ev)
-        elif isinstance(ev, Compute):
+        if isinstance(ev, Compute):
             comp_by.setdefault(ev.step, []).append(ev)
-        else:
+        elif not isinstance(ev, DmaIn):
             outs_by.setdefault(ev.step, []).append(ev)
 
     dma_free = 0.0                      # the fast-level DMA port
@@ -174,11 +179,13 @@ def simulate(
         us.append(ev.step)
         dur = _dma(ev)
         start = dma_free
-        if ev.fetch >= depth:
+        dt = _depth(ev.tensor)
+        if ev.fetch >= dt:
             # slot hazard: this fetch overwrites the buffer that held
             # fetch f−depth, last consumed by the step before fetch
-            # f−depth+1 arrived — whose chain is already scheduled.
-            lu = us[ev.fetch - depth + 1] - 1
+            # f−depth+1 arrived — whose chain is already scheduled
+            # (fetch f is issued depth−1 steps ahead of its use at most).
+            lu = us[ev.fetch - dt + 1] - 1
             if lu >= 0:
                 start = max(start, chain_finish[lu])
         finish = start + dur
@@ -195,8 +202,9 @@ def simulate(
             ready_head += 1
         # ...and the output block's slot has drained its write-back
         for t, n in out_emitted.items():
-            if n >= depth:
-                gate = max(gate, out_finish[t][n - depth])
+            dt = _depth(t)
+            if n >= dt:
+                gate = max(gate, out_finish[t][n - dt])
         prev = gate
         for ev in comp_by.get(e, ()):
             eng = f"engine:{ev.engine}"
@@ -216,13 +224,19 @@ def simulate(
             out_emitted[ev.tensor] = out_emitted.get(ev.tensor, 0) + 1
             _note(ev, start, finish)
 
-    for u in range(min(prefetch + 1, steps)):     # pipeline prologue
-        for ev in ins_by.get(u, ()):
-            _issue_in(ev)
+    # A tensor's fetch for step s is issued at step s − (depth − 1):
+    # the prefetch distance its staging depth buys (depth 1 ⇒ issue at
+    # the consuming step — load/compute serialize).  With uniform depths
+    # this is exactly the classic prologue + steady-state issue loop;
+    # per-tensor depths interleave deeper tensors' prefetches earlier.
+    issue_at: dict[int, list[DmaIn]] = {}
+    for ev in schedule.events:
+        if isinstance(ev, DmaIn):
+            u = max(0, ev.step - (_depth(ev.tensor) - 1))
+            issue_at.setdefault(u, []).append(ev)
     for e in range(steps):
-        if e > 0 and e + prefetch < steps:
-            for ev in ins_by.get(e + prefetch, ()):
-                _issue_in(ev)
+        for ev in issue_at.get(e, ()):
+            _issue_in(ev)
         _run_step(e)
 
     return SimResult(

@@ -18,7 +18,24 @@ the paper's fused NPU+cluster schedule overlap.
 """
 from __future__ import annotations
 
-from repro.core.ftl.cost import CostReport
+from repro.core.ftl.cost import CostReport, OpCompute
+
+
+def engine_groups(
+    report: CostReport,
+) -> tuple[tuple[str, tuple[OpCompute, ...]], ...]:
+    """The step chain's structure: adjacent same-engine ops merged into
+    ``(engine, ops)`` groups, op (data-dependency) order preserved.  One
+    grouping serves every tile step; only the per-step seconds vary (for
+    edge tiles of non-divisor shapes)."""
+    groups: list[tuple[str, tuple[OpCompute, ...]]] = []
+    for oc in report.op_compute:
+        if groups and groups[-1][0] == oc.engine:
+            eng, ocs = groups[-1]
+            groups[-1] = (eng, ocs + (oc,))
+        else:
+            groups.append((oc.engine, (oc,)))
+    return tuple(groups)
 
 
 def step_compute_chain(
@@ -28,15 +45,15 @@ def step_compute_chain(
 
     Returns ``(engine, seconds_per_step, op_names)`` tuples in op order,
     adjacent same-engine ops merged.  ``Σ seconds · n_steps`` equals the
-    analytic per-engine compute time (up to float rounding).
+    analytic per-engine compute time (up to float rounding).  Uniform
+    over steps — exact for divisor tiles; the schedule lowering
+    (``repro.sim.schedule``) weights each step by its actual edge-tile
+    work via :func:`engine_groups` instead when the grid has remainder
+    tiles.
     """
     steps = report.n_steps
-    chain: list[tuple[str, float, tuple[str, ...]]] = []
-    for oc in report.op_compute:
-        per = oc.seconds / steps
-        if chain and chain[-1][0] == oc.engine:
-            eng, secs, names = chain[-1]
-            chain[-1] = (eng, secs + per, names + (oc.name,))
-        else:
-            chain.append((oc.engine, per, (oc.name,)))
-    return tuple(chain)
+    return tuple(
+        (eng, sum(oc.seconds / steps for oc in ocs),
+         tuple(oc.name for oc in ocs))
+        for eng, ocs in engine_groups(report)
+    )

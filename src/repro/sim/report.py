@@ -101,5 +101,75 @@ def chain_timeline(chain, *, max_steps: int = 4) -> str:
     return "\n\n".join(parts)
 
 
+def to_chrome_trace(chain) -> dict:
+    """Replay a chain (or ``BlockPlan``, or a single :class:`Schedule`)
+    and export the event timeline as Chrome-tracing JSON — loadable in
+    Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
+
+    One track (tid) per resource: ``dma`` plus one per engine.  Segments
+    are laid out sequentially (each repeated segment is traced once; its
+    remaining repeats are summarized by a counter in the event args).
+    Timestamps/durations are microseconds, the format's native unit.
+    """
+    if isinstance(chain, Schedule):
+        lowered: tuple = ((chain, 1),)
+        name = chain.name
+        target = chain.target
+    else:
+        chain = getattr(chain, "chain", chain)
+        lowered = lower_chain(chain)
+        name = chain.graph.name
+        target = chain.target
+
+    tids: dict[str, int] = {"dma": 0}
+    events: list[dict] = []
+    t0 = 0.0
+    for sched, rep in lowered:
+        res = simulate(sched, trace=True)
+        for ev, start, finish in res.trace:
+            if isinstance(ev, DmaIn):
+                track, nm = "dma", f"in:{ev.tensor}"
+                args = {"step": ev.step, "bytes": ev.bytes,
+                        "fetch": ev.fetch, "slot": ev.slot,
+                        "level": ev.level}
+            elif isinstance(ev, Compute):
+                track, nm = f"engine:{ev.engine}", "+".join(ev.ops)
+                args = {"step": ev.step}
+            else:
+                track, nm = "dma", f"out:{ev.tensor}"
+                args = {"step": ev.step, "bytes": ev.bytes,
+                        "block": ev.block, "slot": ev.slot,
+                        "level": ev.level}
+            tid = tids.setdefault(track, len(tids))
+            args["segment"] = sched.name
+            if rep > 1:
+                args["repeat"] = rep
+            events.append({
+                "name": nm, "ph": "X", "pid": 0, "tid": tid,
+                "ts": 1e6 * (t0 + start),
+                "dur": 1e6 * (finish - start),
+                "cat": track.split(":")[0],
+                "args": args,
+            })
+        t0 += res.runtime_s * rep
+    meta = [
+        {"name": "process_name", "ph": "M", "pid": 0,
+         "args": {"name": f"{name} on {target.name}"}},
+    ] + [
+        {"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
+         "args": {"name": track}}
+        for track, tid in sorted(tids.items(), key=lambda kv: kv[1])
+    ]
+    return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(chain, path) -> None:
+    """``to_chrome_trace`` serialized to ``path``."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(to_chrome_trace(chain), f)
+
+
 __all__ = ["compare_plan", "sim_rows", "timeline", "chain_timeline",
-           "ChainSimResult"]
+           "to_chrome_trace", "write_chrome_trace", "ChainSimResult"]

@@ -20,10 +20,18 @@ every data movement and compute becomes one event:
   level (outputs accumulate in fast memory and are written once per
   block, at the last step that touches the block).
 
-Buffer slots come from the fast level's ``buffer_depth``: fetch ``k`` of
-a tensor occupies slot ``k mod depth``, so depth 1 serializes load and
-compute while depth ≥ 2 lets the DMA run ahead — the hazard the
-discrete-event simulator (:mod:`repro.sim.des`) enforces.
+Buffer slots come from each tensor's *staging depth* —
+``max(fast.buffer_depth, home.buffer_depth)``, the backing-level-aware
+charge of ``cost.staging_depths`` (equal to the fast level's depth on
+every stock target): fetch ``k`` of a tensor occupies slot
+``k mod depth``, so depth 1 serializes load and compute while depth ≥ 2
+lets the DMA run ahead — the hazard the discrete-event simulator
+(:mod:`repro.sim.des`) enforces per tensor.
+
+Edge tiles are exact: on a non-divisor dim the remainder step's DMA
+bytes and compute seconds are scaled to the actual tile extent, so the
+events sum to the cost model's totals (``bytes_full × revisit``,
+full-size FLOPs) event by event instead of overcounting the edge.
 
 Multiplicity (per-head attention segments) is not unrolled: a segment is
 lowered once and its simulated runtime scales by ``Segment.repeat``,
@@ -35,11 +43,11 @@ import dataclasses
 from typing import Union
 
 from repro.core import hw as hwlib
-from repro.core.ftl.ir import Role
+from repro.core.ftl.ir import Role, dtype_bytes
 from repro.core.ftl.partition import ChainPlan
 from repro.core.ftl.plan import TilePlan
 
-from .engine import step_compute_chain
+from .engine import engine_groups, step_compute_chain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,7 +59,7 @@ class DmaIn:
     level: str
     bytes: int
     fetch: int            # 0-based fetch index of this tensor
-    slot: int             # fetch % buffer_depth
+    slot: int             # fetch % the tensor's staging depth
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +82,7 @@ class DmaOut:
     level: str
     bytes: int
     block: int            # 0-based completion index of this tensor
-    slot: int             # block % buffer_depth
+    slot: int             # block % the tensor's staging depth
 
 
 Event = Union[DmaIn, Compute, DmaOut]
@@ -95,6 +103,9 @@ class Schedule:
     modeled_runtime_s: float
     per_engine_compute_s: dict[str, float]
     per_level_traffic: dict[str, int]
+    # per-tensor staging depth (max(fast.depth, home.depth) — see
+    # cost.staging_depths); tensors not named fall back to buffer_depth.
+    tensor_depths: dict[str, int] = dataclasses.field(default_factory=dict)
 
     def dma_events(self) -> list[Union[DmaIn, DmaOut]]:
         return [e for e in self.events if not isinstance(e, Compute)]
@@ -125,7 +136,30 @@ def lower_plan(plan: TilePlan, name: str | None = None) -> Schedule:
     ins = [t for t in streamed if t.role in (Role.INPUT, Role.WEIGHT)]
     outs = [t for t in streamed if t.role is Role.OUTPUT]
     homes = rep.tensor_homes
-    tile_bytes = {t.name: t.bytes_tile(plan.tiles) for t in streamed}
+    tdepth = {t.name: rep.tensor_depths.get(t.name, depth)
+              for t in streamed}
+
+    # Edge-tile geometry: on a non-divisor dim the last tile is the
+    # remainder, so per-event bytes and per-step compute are weighted by
+    # the *actual* tile extent at the step's coordinates — the events
+    # then sum exactly to the cost model's totals (which already price
+    # ``bytes_full × revisit`` / full-size FLOPs), where uniform
+    # full-tile charges would overcount every remainder step.
+    sizes = {d: plan.constraints[d].size for d in plan.constraints}
+    gtile = [min(plan.tiles[d], sizes[d]) for d in dims]
+    exact = all(sizes[d] % gtile[i] == 0 for i, d in enumerate(dims))
+    pos_of = {d: i for i, d in enumerate(dims)}
+
+    def _extent(i: int, c: int) -> int:
+        return min(gtile[i], sizes[dims[i]] - c * gtile[i])
+
+    def _tile_bytes(t, coords) -> int:
+        n = dtype_bytes(t.dtype)
+        for d in t.dims:
+            i = pos_of.get(d)
+            n *= _extent(i, coords[i]) if i is not None \
+                else min(plan.tiles[d], sizes[d])
+        return n
 
     # Fetch key of an in-tensor = grid positions ≤ its innermost grid
     # dim — a *prefix* of the (outer→inner) coordinate tuple, since every
@@ -153,7 +187,33 @@ def lower_plan(plan: TilePlan, name: str | None = None) -> Schedule:
             key = tuple(coords[i] for i in out_pos[t.name])
             last_touch[t.name][key] = s
 
-    chain = step_compute_chain(rep)
+    # Per-step compute chain.  Divisor grids use the uniform chain
+    # (bit-identical to the pre-edge-tile lowering); remainder grids
+    # weight each op's seconds by the fraction of its work the step's
+    # actual tile extents cover — an op's work dims are its output dims
+    # plus its contract dims (exactly OpNode.flops' factors), any other
+    # grid dim splits the op's work evenly.
+    uniform = step_compute_chain(rep) if exact else None
+    groups = engine_groups(rep)
+    work_dims = {op.name: set(op.output.dims) | set(op.contract_dims())
+                 for op in group.ops}
+
+    def _chain_at(coords) -> tuple[tuple[str, float, tuple[str, ...]], ...]:
+        if uniform is not None:
+            return uniform
+        out = []
+        for engine, ocs in groups:
+            secs = 0.0
+            for oc in ocs:
+                w = 1.0
+                for i, d in enumerate(dims):
+                    if d in work_dims[oc.name]:
+                        w *= _extent(i, coords[i]) / sizes[d]
+                    else:
+                        w *= 1.0 / counts[i]
+                secs += oc.seconds * w
+            out.append((engine, secs, tuple(oc.name for oc in ocs)))
+        return tuple(out)
 
     events: list[Event] = []
     prev_key: dict[str, tuple[int, ...]] = {}
@@ -169,8 +229,9 @@ def lower_plan(plan: TilePlan, name: str | None = None) -> Schedule:
                 fetch_n[t.name] = f + 1
                 events.append(DmaIn(
                     step=s, tensor=t.name, level=homes[t.name],
-                    bytes=tile_bytes[t.name], fetch=f, slot=f % depth))
-        for seq, (engine, secs, op_names) in enumerate(chain):
+                    bytes=_tile_bytes(t, coords), fetch=f,
+                    slot=f % tdepth[t.name]))
+        for seq, (engine, secs, op_names) in enumerate(_chain_at(coords)):
             events.append(Compute(step=s, engine=engine, seconds=secs,
                                   ops=op_names, seq=seq))
         for t in outs:
@@ -180,7 +241,8 @@ def lower_plan(plan: TilePlan, name: str | None = None) -> Schedule:
                 block_n[t.name] = b + 1
                 events.append(DmaOut(
                     step=s, tensor=t.name, level=homes[t.name],
-                    bytes=tile_bytes[t.name], block=b, slot=b % depth))
+                    bytes=_tile_bytes(t, coords), block=b,
+                    slot=b % tdepth[t.name]))
 
     return Schedule(
         name=name or group.name,
@@ -193,6 +255,7 @@ def lower_plan(plan: TilePlan, name: str | None = None) -> Schedule:
         modeled_runtime_s=rep.modeled_runtime_s,
         per_engine_compute_s=dict(rep.per_engine_compute_s),
         per_level_traffic=dict(rep.per_level_traffic),
+        tensor_depths=tdepth,
     )
 
 

@@ -84,6 +84,79 @@ def test_buffer_slots_cycle_through_depth():
     assert any(set(s) == {0, 1} for s in per_tensor_slots.values())
 
 
+def _nondivisor_plan(target, tiles):
+    """A TilePlan with hand-forced (non-divisor) tiles: re-evaluated
+    through the cost model exactly like the autotuner's nudge move."""
+    from repro.core.ftl import cost
+    g = graph.gemm_act_graph(m=384, k=768, n=512, dtype="int8")
+    plan0 = partition.plan_fixed(g, (), target=target).segments[0].plan
+    rep = cost.evaluate(plan0.group, tiles, plan0.constraints, target=target)
+    return dataclasses.replace(plan0, tiles=dict(tiles), report=rep)
+
+
+@pytest.mark.parametrize("target", PRESETS, ids=PRESET_IDS)
+def test_edge_tiles_reproduce_cost_totals_exactly(target):
+    """Non-divisor tiles: remainder steps carry truly smaller DMA bytes and
+    compute seconds, and the events still sum to the cost model's totals
+    event by event — ints exactly, engine seconds to float rounding."""
+    tiles = {"M": 160, "K": 768, "F": 192}      # 384 % 160 != 0, 512 % 192 != 0
+    plan = _nondivisor_plan(target, tiles)
+    rep = plan.report
+    sched = sim.lower_plan(plan)
+    assert sched.n_steps == rep.n_steps
+    dmas = sched.dma_events()
+    assert len(dmas) == rep.dma_transfers
+    per_tensor: dict[str, int] = {}
+    by_level: dict[str, int] = {}
+    for e in dmas:
+        per_tensor[e.tensor] = per_tensor.get(e.tensor, 0) + e.bytes
+        by_level[e.level] = by_level.get(e.level, 0) + e.bytes
+    # exact int equality — no float slack anywhere in the byte accounting
+    assert per_tensor == rep.per_tensor_traffic
+    assert by_level == rep.per_level_traffic
+    assert sum(by_level.values()) == rep.traffic_bytes
+    # edge steps really are smaller: distinct event sizes per tensor
+    in_sizes = {e.bytes for e in dmas if isinstance(e, sim.DmaIn)
+                and e.tensor == "x"}
+    assert len(in_sizes) > 1
+    busy: dict[str, float] = {}
+    for e in sched.compute_events():
+        busy[e.engine] = busy.get(e.engine, 0.0) + e.seconds
+    for eng, t in rep.per_engine_compute_s.items():
+        assert busy[eng] == pytest.approx(t, rel=1e-9)
+    # and the replay stays within the usual analytic bounds
+    r = sim.simulate(sched)
+    assert r.runtime_s >= sched.modeled_runtime_s * (1 - 1e-9)
+    assert r.runtime_s <= (sum(sched.per_engine_compute_s.values())
+                           + sched.transfer_time_s) * (1 + 1e-9)
+
+
+def test_backing_level_depth_deepens_staging():
+    """with_level_buffer_depth on a *backing* level must raise the
+    staging depth of tensors homed there (max(fast, home)), show up in
+    the lowered slots, and never slow the replay down."""
+    base = hw.get_target("cpu_cache")           # every level depth 1
+    deep = base.with_level_buffer_depth("llc", 3)
+    assert deep.name == "cpu_cache@llcd3"
+    g = graph.gemm_act_graph(m=3072, k=768, n=3072, dtype="int8")
+    s_base = sim.lower_plan(
+        partition.plan_fixed(g, (), target=base).segments[0].plan)
+    s_deep = sim.lower_plan(
+        partition.plan_fixed(g, (), target=deep).segments[0].plan)
+    llc_tensors = {e.tensor for e in s_deep.dma_events()
+                   if e.level == "llc"}
+    assert llc_tensors
+    for t in llc_tensors:
+        assert s_base.tensor_depths[t] == 1
+        assert s_deep.tensor_depths[t] == 3
+    slots = {e.slot for e in s_deep.dma_events()
+             if isinstance(e, sim.DmaIn) and e.tensor in llc_tensors}
+    assert slots == {0, 1, 2} or len(slots) > 1
+    r_base = sim.simulate(s_base).runtime_s
+    r_deep = sim.simulate(s_deep).runtime_s
+    assert r_deep <= r_base * (1 + 1e-9)
+
+
 # ---------------------------------------------------------------------------
 # simulated vs analytic: floor, ceiling, convergence
 # ---------------------------------------------------------------------------
