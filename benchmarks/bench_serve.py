@@ -1,0 +1,161 @@
+"""Continuous-batching serving benchmark: sustained tokens/s and request
+latency under synthetic open-loop arrivals (the serving tentpole's CI
+artifact + gates).
+
+Per target preset this builds a :class:`repro.launch.serve.ServeEngine`
+(paged KV cache, AOT-warmed bucket ladder, split prefill/decode plans),
+pre-compiles every bucket's prefill step plus the decode step, then
+serves a Poisson arrival stream of mixed-length prompts and reports
+sustained tokens/s, p50/p99 request latency (arrival → completion,
+queueing included) and the plan-cache counters.
+
+Writes ``BENCH_serve.json`` (uploaded by the CI bench-serve job).
+
+**CI gates** (every preset, or the run fails):
+
+* *zero-replan*: steady-state decode never replans — the decode plan is
+  fetched every step and must hit the warmed cache (``replans == 0`` and
+  a 100% plan-cache hit rate after warmup);
+* *bucket-reuse*: the bucketed prefill plan is planned once per rung and
+  reused across every request admitted into that bucket (≥ 2 admissions
+  share a bucket, with no post-warmup planning).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import hw
+from repro.launch.serve import Request, ServeEngine, poisson_arrivals
+from repro.models import model as M
+
+from ._smoke import smoke
+
+OUT = "BENCH_serve.json"
+
+ARCH = "llama3.2-3b"
+
+
+def _params():
+    if smoke():
+        return {
+            "targets": ("cpu_cache", "rv32_npu"),
+            "requests": 10, "slots": 4, "max_seq": 64,
+            "prompt_lens": (4, 24), "max_new": 6, "rate": 50.0,
+        }
+    return {
+        "targets": ("cpu_cache", "rv32_npu", "tpu_v5e"),
+        "requests": 64, "slots": 8, "max_seq": 256,
+        "prompt_lens": (8, 96), "max_new": 32, "rate": 20.0,
+    }
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def serve_row(cfg, params, target: hw.Target, p: dict, seed: int = 0
+              ) -> dict:
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(p["prompt_lens"][0], p["prompt_lens"][1] + 1,
+                        size=p["requests"])
+    reqs = [Request(i, rng.integers(2, cfg.vocab_size, size=int(n))
+                    .astype(np.int32), p["max_new"])
+            for i, n in enumerate(lens)]
+    arrivals = poisson_arrivals(p["requests"], p["rate"], seed)
+
+    eng = ServeEngine(cfg, params, batch_slots=p["slots"],
+                      max_seq=p["max_seq"], eos_id=-1, target=target)
+    eng.warmup_compile()
+    warm = dict(eng.plans.counters())           # post-warmup snapshot
+
+    t0 = time.perf_counter()
+    done = eng.run(reqs, {}, arrivals=arrivals)
+    wall = time.perf_counter() - t0
+
+    lat = [r.latency_s for r in done]
+    after = eng.plans.counters()
+    buckets_reused = [b for b, n in eng.stats["bucket_admissions"].items()
+                      if n >= 2]
+    gate_zero_replan = (eng.stats["replans"] == 0
+                        and after["misses"] == warm["misses"]
+                        and after["misses_after_warmup"] == 0)
+    gate_bucket_reuse = (bool(buckets_reused)
+                         and after["misses"] == warm["misses"])
+    report = eng.plan_report()
+    return {
+        "target": target.name,
+        "paged_kv": eng.paged,
+        "buckets": list(eng.buckets),
+        "requests": len(done),
+        "tokens": eng.stats["tokens"],
+        "decode_steps": eng.stats["decode_steps"],
+        "prefills": eng.stats["prefills"],
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(eng.stats["tokens"] / max(wall, 1e-9), 1),
+        "latency_p50_ms": round(1e3 * _percentile(lat, 50), 1),
+        "latency_p99_ms": round(1e3 * _percentile(lat, 99), 1),
+        "bucket_admissions": {str(k): v for k, v
+                              in sorted(eng.stats["bucket_admissions"]
+                                        .items())},
+        "plan_cache": after,
+        "replans": eng.stats["replans"],
+        "decode_cuts": report["decode"]["cuts"] if report["decode"] else [],
+        "prefill_cuts": (report["prefill"]["cuts"]
+                         if report["prefill"] else []),
+        "decode_differs_from_prefill":
+            report["decode_differs_from_prefill"],
+        "gate_zero_replan_ok": gate_zero_replan,
+        "gate_bucket_reuse_ok": gate_bucket_reuse,
+        "gate_ok": gate_zero_replan and gate_bucket_reuse,
+    }
+
+
+def run() -> dict:
+    p = _params()
+    cfg = configs.get_config(ARCH).reduced()
+    cfg = dataclasses.replace(cfg, remat=False)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return {
+        "smoke": smoke(),
+        "arch": cfg.name,
+        "open_loop": {"rate_req_per_s": p["rate"],
+                      "prompt_lens": list(p["prompt_lens"]),
+                      "max_new": p["max_new"], "slots": p["slots"]},
+        "gate": "zero replans during steady-state decode AND bucketed "
+                "prefill plan reused across requests within a bucket, "
+                "on every preset",
+        "targets": [serve_row(cfg, params, hw.get_target(t), p)
+                    for t in p["targets"]],
+    }
+
+
+def main() -> None:
+    result = run()
+    for row in result["targets"]:
+        print(f"{row['target']}: {row['tokens']} tokens in "
+              f"{row['wall_s']}s ({row['tokens_per_s']} tok/s), "
+              f"p50 {row['latency_p50_ms']} ms / "
+              f"p99 {row['latency_p99_ms']} ms, "
+              f"{row['prefills']} prefills over buckets "
+              f"{row['bucket_admissions']}, "
+              f"{row['replans']} replans, plan cache {row['plan_cache']}, "
+              f"decode!=prefill cuts: {row['decode_differs_from_prefill']}")
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {OUT}")
+    bad = [r["target"] for r in result["targets"] if not r["gate_ok"]]
+    if bad:
+        raise RuntimeError(
+            f"serve gate FAILED on {bad}: steady-state decode must never "
+            f"replan (100% plan-cache hits after warmup) and prefill "
+            f"plans must be reused across requests within a bucket")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,8 @@ def _write_status(results: list[dict]) -> None:
 def main() -> None:
     from . import (bench_attention, bench_autotune, bench_block,
                    bench_paper_mlp, bench_roofline, bench_schedule,
-                   bench_solver, bench_targets, bench_tpu_mlp)
+                   bench_serve, bench_solver, bench_targets,
+                   bench_tpu_mlp)
 
     sections = [
         ("targets: per-level traffic across memory hierarchies + gate",
@@ -42,6 +43,8 @@ def main() -> None:
         ("ftl-solver: branch-and-bound performance", bench_solver.main),
         ("block-exec: layer-per-layer vs BlockPlan-driven whole block",
          bench_block.main),
+        ("serve: continuous batching tokens/s + latency, open-loop + gate",
+         bench_serve.main),
         ("roofline: dry-run artifacts (per arch x shape x mesh)",
          bench_roofline.main),
     ]

@@ -1,11 +1,24 @@
 """Serving example: continuous-batching engine over a reduced model.
 
 Admits a queue of prompt requests into fixed decode slots, prefills each
-(splicing its KV cache into the batch cache), then decodes all active
-slots in lock-step — the serving pattern the decode dry-run cells lower
-at production shape.
+at its bucketed length (paged KV cache when the config supports it),
+then decodes all active slots together — each at its own position.
+Prefill and decode run on *separate* FTL plans (the memory-bound m=1
+decode DP generally picks different cuts), both AOT-warmed so steady
+state never replans.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
+
+Extra flags pass straight through to ``repro.launch.serve``:
+
+  --arrival-rate 8         open-loop Poisson arrivals at 8 req/s
+                           (default: everything arrives at t=0)
+  --trace decode.json      Chrome-tracing timeline of the decode plan's
+                           simulated schedule (load in Perfetto or
+                           chrome://tracing)
+  --target rv32_npu        plan for a specific memory-hierarchy preset
+  --block-size 16          paged-KV page length; --dense-kv disables
+                           paging
 """
 import sys
 

@@ -52,6 +52,9 @@ def _runtime_ctx(
         act=cfg.mlp_act,
         target=plan.target,
         head_dim=cfg.resolved_head_dim,
+        # requalification keeps the plan's regime: a decode plan must not
+        # rebind a Pallas kernel just because the runtime shape probe ran
+        phase=plan.phase,
     )
 
 
@@ -159,6 +162,14 @@ def _resolve_mlp(
         )
     ctx = _runtime_ctx(plan, "mlp", _sub_schedule(plan, "mlp"), m, dtype)
     return _bind_target(_stage_executor(plan, "mlp", ctx), plan.target)
+
+
+# public names for the per-stage resolvers: the serving path
+# (models.layers.mlp_layer with plan=) dispatches its MLP through the
+# plan's binding exactly as run_block would, without running run_block
+resolve_mlp = _resolve_mlp
+resolve_attention = _resolve_attention
+resolve_gemm = _resolve_gemm
 
 
 def resolved_executors(

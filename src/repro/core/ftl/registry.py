@@ -55,6 +55,11 @@ class ExecContext:
     act: str = "gelu"
     target: hwlib.Target | None = None   # the plan's memory hierarchy
     head_dim: int = 0            # attention kernels' footprint probe
+    # 'prefill' (full-sequence, compute-heavy) vs 'decode' (m=1 against a
+    # cache, memory-bound).  Decode shapes never fill an MXU lane tile, so
+    # the Pallas kernels disqualify themselves there and the registry
+    # binds the XLA executors instead (decode-shape qualification).
+    phase: str = "prefill"
 
 
 def _vmem_class(target: hwlib.Target | None) -> bool:
@@ -326,11 +331,12 @@ def _run_xla_gemm(x, w, *, target=None):
 register(Executor(
     name="pallas_fused_mlp", kind="mlp", backend="pallas", priority=100,
     qualifies=lambda c: (c.platform == "tpu" and c.schedule == "fused"
-                         and _mlp_kernel_fits(c)),
+                         and c.phase != "decode" and _mlp_kernel_fits(c)),
     run=_run_pallas_fused_mlp))
 register(Executor(
     name="pallas_partial_mlp", kind="mlp", backend="pallas", priority=90,
     qualifies=lambda c: (c.platform == "tpu" and c.schedule == "partial"
+                         and c.phase != "decode"
                          and not c.gated and _partial_mlp_kernel_fits(c)),
     run=_run_pallas_partial_mlp))
 register(Executor(
@@ -349,6 +355,7 @@ register(Executor(
     name="pallas_flash_attention", kind="attention", backend="pallas",
     priority=100,
     qualifies=lambda c: (c.platform == "tpu" and c.schedule != "unfused"
+                         and c.phase != "decode"
                          and _attention_kernel_fits(c)),
     run=_run_pallas_attention))
 register(Executor(
@@ -357,7 +364,7 @@ register(Executor(
     run=_run_ref_attention))
 register(Executor(
     name="pallas_gemm", kind="gemm", backend="pallas", priority=100,
-    qualifies=lambda c: c.platform == "tpu",
+    qualifies=lambda c: c.platform == "tpu" and c.phase != "decode",
     run=_run_pallas_gemm))
 register(Executor(
     name="xla_gemm", kind="gemm", backend="xla", priority=10,
@@ -405,6 +412,10 @@ class BlockPlan:
     # and chain.target may be a depth-modified variant of the request's
     # target.
     tune: object = None
+    # serving regime the plan was made for: 'prefill' (full-sequence) or
+    # 'decode' (m=1 against a cache).  Part of every plan-cache key; the
+    # bindings were qualified with this phase in their ExecContext.
+    phase: str = "prefill"
 
     @property
     def target(self) -> hwlib.Target:
@@ -467,7 +478,7 @@ def _freeze(d: Mapping[str, int] | None):
 def _plan_block_cached(cfg, m: int, dtype: str | None,
                        target: hwlib.Target, sharded: tuple | None,
                        plat: str, residual: bool,
-                       autotune=None) -> BlockPlan:
+                       autotune=None, phase: str = "prefill") -> BlockPlan:
     g = graph.block_graph(cfg, m=m, dtype=dtype, residual=residual)
     sharded_d = dict(sharded) if sharded else None
     tune_result = None
@@ -483,7 +494,7 @@ def _plan_block_cached(cfg, m: int, dtype: str | None,
         chain = partition.plan_chain(g, target=target,
                                      sharded_sizes=sharded_d)
     shell = BlockPlan(chain=chain, bindings=(), platform=plat, cfg=cfg,
-                      m=m, dtype=dtype or cfg.dtype)
+                      m=m, dtype=dtype or cfg.dtype, phase=phase)
     sub = {"mlp": shell.mlp_schedule, "attention": shell.attention_schedule}
     bindings = []
     for seg in chain.segments:
@@ -497,12 +508,12 @@ def _plan_block_cached(cfg, m: int, dtype: str | None,
             m=m, d_model=cfg.d_model,
             d_ff=cfg.moe_d_ff if cfg.is_moe else cfg.d_ff,
             dtype=dtype or cfg.dtype, gated=cfg.mlp_gated, act=cfg.mlp_act,
-            target=target, head_dim=cfg.resolved_head_dim)
+            target=target, head_dim=cfg.resolved_head_dim, phase=phase)
         bindings.append(GroupBinding(segment=seg, kind=kind,
                                      executor=find(kind, ctx).name))
     return BlockPlan(chain=chain, bindings=tuple(bindings), platform=plat,
                      cfg=cfg, m=m, dtype=dtype or cfg.dtype,
-                     tune=tune_result)
+                     tune=tune_result, phase=phase)
 
 
 def plan_block(
@@ -514,6 +525,7 @@ def plan_block(
     sharded_sizes: Mapping[str, int] | None = None,
     residual: bool = True,
     autotune=None,
+    phase: str = "prefill",
 ) -> BlockPlan:
     """Plan one transformer block of ``cfg`` at ``m`` tokens on ``target``
     (None → the default target) and bind every planned fusion group to the
@@ -524,11 +536,22 @@ def plan_block(
     the DES-runtime-optimal candidate (simulated runtime ≤ the analytic
     plan's, by construction) and ``BlockPlan.tune`` carries the full
     :class:`~repro.tune.TuneResult`.  The config is part of the plan
-    cache key — tuned and untuned plans never alias."""
+    cache key — tuned and untuned plans never alias.
+
+    ``phase`` ('prefill' | 'decode') runs the same partition DP at the
+    regime's own shape: decode plans (``m=1`` against a cache) are
+    memory-bound, so the max(compute, transfer) objective generally picks
+    different cuts than prefill, and their bindings never qualify the
+    Pallas kernels (decode-shape qualification).  Phase is part of the
+    plan-cache key — a decode plan and a prefill plan for the same shapes
+    never alias."""
+    if phase not in ("prefill", "decode"):
+        raise ValueError(f"phase must be 'prefill' or 'decode', "
+                         f"got {phase!r}")
     target = target if target is not None else hwlib.default_target()
     return _plan_block_cached(cfg, m, dtype, target,
                               _freeze(sharded_sizes), platform(), residual,
-                              autotune)
+                              autotune, phase)
 
 
 # ---------------------------------------------------------------------------

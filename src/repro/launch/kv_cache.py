@@ -1,0 +1,216 @@
+"""Paged (blocked) KV cache for the continuous-batching serving engine.
+
+The attention executor already tiles over the sequence, so the cache can
+be backed by fixed-size sequence blocks ("pages") allocated per slot
+instead of one dense ``(slots, max_seq, ...)`` tensor per layer:
+
+* The physical pool is ``models.model.init_cache(cfg, num_blocks + 1,
+  block_size)`` — the *batch* axis of every cache leaf plays the physical
+  block index, so the pool reuses the model's exact cache structure
+  (stacked ``layers`` leaves ``(L, NB+1, bs, Hk, Dh)``, remainder leaves
+  ``(NB+1, bs, Hk, Dh)``).  Physical block 0 is a reserved scratch page:
+  unmapped table entries and inactive slots point there, so a stray
+  write can never corrupt a mapped page.
+* Each slot owns a block table row (host-side numpy, ``(slots,
+  blocks_per_slot)`` int32 of physical block ids).  Pages are allocated
+  on demand as a slot's position crosses a block boundary and returned
+  to the free list on eviction — the continuous-batching scheduler's
+  admission control can therefore run the pool smaller than
+  ``slots * blocks_per_slot`` and queue requests under memory pressure.
+* :func:`gather_dense` / :func:`scatter_token` are the jit-traceable
+  halves of a decode step: gather materializes the per-slot dense view
+  ``(slots, max_seq, ...)`` from the pool (one ``take`` + reshape per
+  leaf), and scatter writes each slot's single new KV token back to its
+  ``(block, offset)`` coordinate.  The serving engine fuses
+  gather → model.decode_step → scatter into one jitted function, so the
+  dense view never round-trips to host memory.
+
+Paging requires every decode-cache leaf to be a full-attention KV tensor
+with the model's uniform ``(batch, seq, Hk, Dh)`` layout —
+:func:`paged_supported` gates it to pure-``attn`` decoder-only configs
+(ring-buffered local windows, recurrent states and cross caches keep the
+dense per-slot path in the engine).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+def paged_supported(cfg) -> bool:
+    """True when every decode-cache leaf is a plain full-attention KV
+    tensor (pure-'attn' decoder-only stacks)."""
+    if cfg.is_encoder_decoder:
+        return False
+    kinds, _, rem_kinds = M._layer_split(cfg)
+    return all(k == "attn" for k in [*kinds, *rem_kinds])
+
+
+def _block_axis(path) -> int:
+    """Physical-block axis of a pool leaf: stacked 'layers' leaves carry a
+    leading layer dim → axis 1; remainder leaves → axis 0 (the same
+    structural rule the engine's dense splice uses)."""
+    names = [str(k.key) for k in path
+             if isinstance(k, jax.tree_util.DictKey)]
+    return 1 if names and names[0] == "layers" else 0
+
+
+def gather_dense(pool, tables: jax.Array):
+    """Pool → per-slot dense cache view.
+
+    ``tables``: (slots, blocks_per_slot) int32 physical block ids.  Each
+    leaf ``(..., NB+1, bs, ...)`` gathers its mapped pages and merges
+    them into ``(..., slots, blocks_per_slot * bs, ...)`` — exactly the
+    shape ``model.decode_step`` expects for ``max_seq =
+    blocks_per_slot * bs``.  Unmapped entries read the scratch page;
+    decode masks them out (position mask covers only ``<= pos``).
+    """
+    slots, w = tables.shape
+
+    def g(path, leaf):
+        ax = _block_axis(path)
+        taken = jnp.take(leaf, tables.reshape(-1), axis=ax)
+        sh = taken.shape
+        bs = sh[ax + 1]
+        return taken.reshape(sh[:ax] + (slots, w * bs) + sh[ax + 2:])
+
+    return jax.tree_util.tree_map_with_path(g, pool)
+
+
+def scatter_token(pool, dense, pos: jax.Array, wblk: jax.Array,
+                  woff: jax.Array):
+    """Write each slot's newly-decoded KV token back into the pool.
+
+    ``dense`` is the post-decode dense view; ``pos`` (slots,) is each
+    slot's write position inside its dense view, ``wblk``/``woff``
+    (slots,) its physical (block, offset) coordinate — inactive slots
+    point at the scratch page (block 0).
+    """
+    def s(path, pleaf, dleaf):
+        ax = _block_axis(path)
+        seq_ax = ax + 1
+        idx_shape = [1] * dleaf.ndim
+        idx_shape[ax] = pos.shape[0]
+        idx = pos.reshape(idx_shape)
+        tok = jnp.take_along_axis(dleaf, idx, axis=seq_ax)
+        tok = jnp.squeeze(tok, axis=seq_ax)        # (..., slots, Hk, Dh)
+        if ax == 1:
+            return pleaf.at[:, wblk, woff].set(tok)
+        return pleaf.at[wblk, woff].set(tok)
+
+    return jax.tree_util.tree_map_with_path(s, pool, dense)
+
+
+@jax.jit
+def _write_pages(pool, cache1, blocks: jax.Array):
+    """Write one request's prefill cache (batch-1, seq = n_pages * bs)
+    into its allocated pages (jitted; retraces per page count)."""
+    def s(path, pleaf, cleaf):
+        ax = _block_axis(path)
+        bs = pleaf.shape[ax + 1]
+        c = jnp.squeeze(cleaf, axis=ax)            # drop request batch-1
+        sh = c.shape
+        c = c.reshape(sh[:ax] + (blocks.shape[0], bs) + sh[ax + 1:])
+        if ax == 1:
+            return pleaf.at[:, blocks].set(c)
+        return pleaf.at[blocks].set(c)
+
+    return jax.tree_util.tree_map_with_path(s, pool, cache1)
+
+
+class PagedKVCache:
+    """Block-pool KV cache with per-slot page tables (single host).
+
+    ``num_blocks`` bounds the physical pool (default: enough for every
+    slot at ``max_seq``, i.e. no admission pressure); one extra scratch
+    page is always added on top.  All table/free-list bookkeeping is
+    host-side numpy — only the pool itself lives on device.
+    """
+
+    def __init__(self, cfg, *, slots: int, max_seq: int, block_size: int,
+                 num_blocks: int | None = None):
+        if not paged_supported(cfg):
+            raise ValueError(
+                "paged KV cache needs a pure-'attn' decoder-only config; "
+                f"{cfg.name!r} has other cache kinds")
+        if max_seq % block_size:
+            raise ValueError(
+                f"max_seq={max_seq} must be a multiple of "
+                f"block_size={block_size}")
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.blocks_per_slot = max_seq // block_size
+        self.num_blocks = (num_blocks if num_blocks is not None
+                           else slots * self.blocks_per_slot)
+        if self.num_blocks < self.blocks_per_slot:
+            raise ValueError(
+                f"pool of {self.num_blocks} blocks cannot hold even one "
+                f"slot at max_seq ({self.blocks_per_slot} blocks)")
+        # +1: physical block 0 is the reserved scratch page
+        self.pool = M.init_cache(cfg, self.num_blocks + 1, block_size)
+        self.tables = np.zeros((slots, self.blocks_per_slot), np.int32)
+        self.n_alloc = np.zeros(slots, np.int32)
+        self._free = list(range(self.num_blocks, 0, -1))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_allocate(self, slot: int, n_tokens: int) -> bool:
+        need = self.blocks_for(n_tokens) - int(self.n_alloc[slot])
+        return need <= len(self._free)
+
+    def allocate(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot`` to cover ``n_tokens`` positions.  Returns False
+        (allocating nothing) when the free list cannot cover the growth —
+        the scheduler's admission-control signal."""
+        need = self.blocks_for(n_tokens)
+        have = int(self.n_alloc[slot])
+        if need <= have:
+            return True
+        if need > self.blocks_per_slot:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceed max_seq "
+                f"{self.max_seq}")
+        if need - have > len(self._free):
+            return False
+        for j in range(have, need):
+            self.tables[slot, j] = self._free.pop()
+        self.n_alloc[slot] = need
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return the slot's pages to the free list (eviction)."""
+        for j in range(int(self.n_alloc[slot])):
+            self._free.append(int(self.tables[slot, j]))
+        self.tables[slot, :] = 0
+        self.n_alloc[slot] = 0
+
+    def table_array(self) -> jax.Array:
+        return jnp.asarray(self.tables)
+
+    def write_coords(self, slot: int, pos: int) -> tuple[int, int]:
+        """Physical (block, offset) of dense position ``pos`` in ``slot``."""
+        j = pos // self.block_size
+        return int(self.tables[slot, j]), pos % self.block_size
+
+    def write_prefill(self, slot: int, cache1, n_tokens: int) -> None:
+        """Splice one request's prefill cache (batch 1, seq a multiple of
+        ``block_size``) into the slot's pages, allocating them first.
+        The caller has already checked/established capacity via
+        :meth:`allocate`."""
+        if not self.allocate(slot, n_tokens):
+            raise RuntimeError(
+                f"KV pool exhausted admitting into slot {slot} "
+                f"({self.free_blocks} free blocks)")
+        nb = self.blocks_for(n_tokens)
+        blocks = jnp.asarray(self.tables[slot, :nb])
+        self.pool = _write_pages(self.pool, cache1, blocks)

@@ -1,16 +1,32 @@
-"""Serving driver: batched prefill + decode with continuous batching.
+"""Serving driver: continuous batching on planned schedules.
 
-A minimal but real serving loop: requests (prompt token arrays) are
-admitted into fixed batch slots; each engine step decodes one token for
-every active slot; finished slots (EOS or max-len) are refilled from the
-queue.  Prefill runs per-admission (prefix cache insertion), decode is the
-steady-state batched step — the two steps the decode/prefill dry-run cells
-lower at production shapes.
+A real serving loop on top of the FTL planning stack:
 
-CPU demo::
+* **Paged KV cache** — pure-'attn' decoder-only configs back their cache
+  with fixed-size sequence blocks allocated per slot
+  (:mod:`repro.launch.kv_cache`); pages are allocated on demand as a
+  slot's position grows and freed on eviction, so admission control can
+  queue requests under memory pressure.  Other families (local windows,
+  recurrent state, cross caches, enc-dec) keep the dense per-slot cache.
+* **Mixed sequence lengths** — each slot decodes at its *own* position
+  (vector ``pos`` through ``model.decode_step``): admission prefills at
+  the request's bucketed length, decode appends per slot, eviction on
+  EOS/max-len refills the slot from the queue.
+* **Plan cache** — serving plans are keyed ``(cfg, bucketed m, dtype,
+  target, phase)``.  Prompts bucket through the
+  :data:`repro.models.model.PREFILL_BUCKETS` ladder (ahead-of-time
+  warmed), so steady state replans exactly zero times; the CI bench
+  gates on that.
+* **Split prefill/decode plans** — decode plans at ``m=1`` run through
+  the same partition DP as prefill; memory-bound, they generally pick
+  different cuts (pinned on ``rv32_npu``), and their bindings never
+  qualify the Pallas kernels (decode-shape qualification).  Serve logs
+  ``resolved_executors`` for *both* regimes, mirroring train.
+
+CPU demo (open-loop arrivals + decode-plan timeline)::
 
   python -m repro.launch.serve --arch yi-6b --reduced --requests 8 \\
-      --max-new 32
+      --max-new 32 --arrival-rate 4 --trace /tmp/decode_trace.json
 """
 from __future__ import annotations
 
@@ -25,8 +41,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import hw
-from repro.core.ftl import InfeasibleError
-from repro.core.ftl import registry as ftl_registry
+from repro.launch import kv_cache as KV
 from repro.models import model as M
 from repro.train import steps as S
 
@@ -38,52 +53,234 @@ class Request:
     max_new: int
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    arrival_s: float = 0.0       # open-loop arrival offset from run start
+    bucket: int = 0              # prefill bucket the prompt landed in
+    t_arrival: float = 0.0       # absolute times (perf_counter)
+    t_admitted: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        """Arrival → completion, including queueing for a slot."""
+        return self.t_done - self.t_arrival
+
+
+class PlanCache:
+    """Serving plan cache keyed ``(cfg, bucketed m, dtype, target, phase)``.
+
+    A thin counting wrapper over :func:`repro.models.model.serve_plan`:
+    ``warmup`` pre-plans the whole prefill bucket ladder plus the decode
+    plan, after which every lookup must hit — ``misses_after_warmup`` is
+    the CI gate's "zero replans during steady-state decode" counter.
+    """
+
+    def __init__(self, cfg, *, dtype: str, target: hw.Target,
+                 buckets: tuple[int, ...]):
+        self.cfg = cfg
+        self.dtype = dtype
+        self.target = target
+        self.buckets = tuple(buckets)
+        self._plans: dict[tuple, object] = {}
+        self.hits = 0
+        self.misses = 0
+        self.warmed = False
+        self.misses_after_warmup: list[tuple[str, int]] = []
+
+    def get(self, m: int, phase: str):
+        """(bucketed m, BlockPlan-or-None) for one lookup."""
+        mb = 1 if phase == "decode" else M.bucket_m(m, self.buckets)
+        key = (self.cfg, mb, self.dtype, self.target, phase)
+        if key in self._plans:
+            self.hits += 1
+            return mb, self._plans[key]
+        self.misses += 1
+        if self.warmed:
+            self.misses_after_warmup.append((phase, mb))
+        _, plan = M.serve_plan(self.cfg, m=mb, dtype=self.dtype,
+                               target=self.target, phase=phase,
+                               buckets=self.buckets)
+        self._plans[key] = plan
+        return mb, plan
+
+    def warmup(self) -> None:
+        for b in self.buckets:
+            self.get(b, "prefill")
+        self.get(1, "decode")
+        self.warmed = True
+
+    def counters(self) -> dict:
+        return {
+            "plans": len(self._plans),
+            "hits": self.hits,
+            "misses": self.misses,
+            "misses_after_warmup": len(self.misses_after_warmup),
+        }
+
+
+def _default_buckets(max_seq: int, block_size: int) -> tuple[int, ...]:
+    rungs = [b for b in M.PREFILL_BUCKETS if b <= max_seq]
+    if not rungs or rungs[-1] < max_seq:
+        rungs.append(max_seq)
+    rungs = [b for b in rungs if b % block_size == 0] or [max_seq]
+    return tuple(rungs)
 
 
 class ServeEngine:
-    """Fixed-slot continuous batching engine (single host)."""
+    """Fixed-slot continuous batching engine (single host).
+
+    ``target`` picks the planning preset (None → the process default);
+    ``block_size`` is the paged-KV page length (``paged=False`` forces
+    the dense per-slot cache, ``kv_blocks`` shrinks the physical pool
+    below ``slots * max_seq / block_size`` to exercise admission
+    control)."""
 
     def __init__(self, cfg, params, *, batch_slots: int, max_seq: int,
-                 eos_id: int = 1):
+                 eos_id: int = 1, target: hw.Target | None = None,
+                 block_size: int = 8, paged: bool | None = None,
+                 kv_blocks: int | None = None,
+                 buckets: tuple[int, ...] | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
         self.eos = eos_id
-        self.prefill = jax.jit(S.make_prefill_step(cfg, None))
-        self.decode = jax.jit(S.make_decode_step(cfg, None))
+        self.target = target if target is not None else hw.default_target()
+        self.block_size = block_size
+        self.buckets = (tuple(buckets) if buckets is not None
+                        else _default_buckets(max_seq, block_size))
+        if any(b > max_seq for b in self.buckets):
+            raise ValueError(f"bucket ladder {self.buckets} exceeds "
+                             f"max_seq={max_seq}")
         self.active: list[Request | None] = [None] * batch_slots
-        self.cache = M.init_cache(cfg, batch_slots, max_seq)
         self.pos = np.zeros(batch_slots, np.int32)
-        # Graph-level FTL plan for the steady-state prefill shape: the
-        # whole block (projections + attention core + MLP) goes through
-        # one partitioner and the executor registry binds each planned
-        # fusion group.  Families without a plannable block (pure SSM)
-        # serve without one.  The plan is priced for the process-default
-        # memory-hierarchy target; stats record which one so a plan made
-        # for the wrong machine is visible in serving logs.
-        try:
-            self.block_plan = ftl_registry.plan_block(cfg, m=max_seq)
-        except (ValueError, InfeasibleError):
-            self.block_plan = None
+        # mixed-length decode needs per-slot positions; enc-dec keeps the
+        # scalar path (uniform sinusoidal offset)
+        self._vector_pos = not cfg.is_encoder_decoder
+
+        self.paged = (KV.paged_supported(cfg) if paged is None else paged)
+        if self.paged and not KV.paged_supported(cfg):
+            raise ValueError(f"{cfg.name!r} cannot use the paged KV cache")
+        if self.paged:
+            if max_seq % block_size:
+                raise ValueError(f"max_seq={max_seq} must be a multiple "
+                                 f"of block_size={block_size}")
+            if any(b % block_size for b in self.buckets):
+                raise ValueError(
+                    f"every prefill bucket must be a multiple of "
+                    f"block_size={block_size}, got {self.buckets}")
+            self.kv = KV.PagedKVCache(cfg, slots=batch_slots,
+                                      max_seq=max_seq,
+                                      block_size=block_size,
+                                      num_blocks=kv_blocks)
+            self.cache = None
+        else:
+            self.kv = None
+            self.cache = M.init_cache(cfg, batch_slots, max_seq)
+
+        # AOT warmup of the bucket ladder + the decode plan: after this,
+        # steady state never plans again (the bench gate).
+        self.plans = PlanCache(cfg, dtype=cfg.dtype, target=self.target,
+                               buckets=self.buckets)
+        self.plans.warmup()
+        _, self.decode_plan = self.plans.get(1, "decode")
+        _, self.block_plan = self.plans.get(self.buckets[-1], "prefill")
+        self._decode_fn = self._build_decode(self.decode_plan)
+        self._decode_fn_plan = self.decode_plan
+        self._prefill_fns: dict[int, Any] = {}
+
         self.stats = {
             "prefills": 0, "decode_steps": 0, "tokens": 0,
+            "replans": 0,
+            "bucket_admissions": {},
             "ftl_schedule": (self.block_plan.schedule
                              if self.block_plan else "n/a"),
-            "ftl_target": (self.block_plan.target.name
-                           if self.block_plan else hw.default_target().name),
+            "ftl_target": self.target.name,
             "block_exec": "n/a",
         }
 
     # ------------------------------------------------------------------
+    # plan-aware step builders
+    # ------------------------------------------------------------------
+    def _build_decode(self, plan):
+        base = S.make_decode_step(self.cfg, None, plan=plan)
+        if not self.paged:
+            return jax.jit(base)
+
+        def paged_step(params, pool, tables, tok, pos, wblk, woff):
+            dense = KV.gather_dense(pool, tables)
+            logits, new_dense = base(params, dense, tok, pos)
+            return logits, KV.scatter_token(pool, new_dense, pos, wblk,
+                                            woff)
+
+        return jax.jit(paged_step)
+
+    def _prefill_fn(self, bucket: int, plan):
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            # paged caches splice page-aligned bucket-length caches; the
+            # dense path right-pads to max_seq at splice time instead
+            fn = jax.jit(S.make_prefill_step(self.cfg, None, plan=plan))
+            self._prefill_fns[bucket] = fn
+        return fn
+
+    def plan_report(self) -> dict:
+        """Resolved executors + cuts for *both* serving regimes (mirrors
+        what train logs for its single shape)."""
+        from repro.core.ftl import executor_block
+
+        def entry(plan, m):
+            if plan is None:
+                return None
+            return {
+                "m": m,
+                "schedule": plan.schedule,
+                "cuts": list(plan.chain.cuts()),
+                "executors": executor_block.resolved_executors(plan, m=m),
+            }
+
+        pre = entry(self.block_plan, self.buckets[-1])
+        dec = entry(self.decode_plan, 1)
+        return {
+            "target": self.target.name,
+            "buckets": list(self.buckets),
+            "prefill": pre,
+            "decode": dec,
+            "decode_differs_from_prefill": bool(
+                pre and dec and pre["cuts"] != dec["cuts"]),
+        }
+
+    def warmup_compile(self, extras: dict[str, Any] | None = None) -> None:
+        """Compile every bucket's prefill step and the decode step ahead
+        of time, so open-loop latency percentiles measure serving, not
+        XLA compiles.  Pure: engine state is untouched."""
+        extras = extras or {}
+        for b in self.buckets:
+            _, plan = self.plans.get(b, "prefill")
+            fn = self._prefill_fn(b, plan)
+            batch = {"tokens": jnp.zeros((1, b), jnp.int32), **extras}
+            fn(self.params, batch, jnp.int32(b - 1))[0].block_until_ready()
+        tok = jnp.zeros((self.slots, 1), jnp.int32)
+        if self.paged:
+            pos = jnp.zeros((self.slots,), jnp.int32)
+            zero = jnp.zeros((self.slots,), jnp.int32)
+            out = self._decode_fn(self.params, self.kv.pool,
+                                  self.kv.table_array(), tok, pos, zero,
+                                  zero)
+        else:
+            pos = (jnp.zeros((self.slots,), jnp.int32) if self._vector_pos
+                   else jnp.int32(0))
+            out = self._decode_fn(self.params, self.cache, tok, pos)
+        out[0].block_until_ready()
+
+    # ------------------------------------------------------------------
     def execute_block_plan(self):
-        """Run the stored BlockPlan for real at the serving shape.
+        """Run the stored prefill BlockPlan for real at the serving shape.
 
         Executes one transformer block of the engine's own parameters
         through ``registry.run_block`` on a (1, max_seq, d_model)
-        activation — the steady-state prefill shape the plan was made
-        for.  This is where every binding is requalified on the serving
-        host (per-segment fallback), and it prices the plan in wall-clock
+        activation — the steady-state prefill shape regime.  This is
+        where every binding is requalified on the serving host
+        (per-segment fallback), and it prices the plan in wall-clock
         terms instead of only reporting modeled traffic.  Records the
         resolved executors and timing in ``stats``; returns the stats
         entry (None when the model has no plan or no plannable layer).
@@ -94,6 +291,7 @@ class ServeEngine:
         if p is None or ("attn" not in p and "mlp" not in p):
             return None
         from repro.core.ftl import executor_block
+        from repro.core.ftl import registry as ftl_registry
         cfg = self.cfg
         window = cfg.local_window if kind == "local" else None
         x = jax.random.normal(
@@ -150,49 +348,119 @@ class ServeEngine:
         return None, None
 
     # ------------------------------------------------------------------
-    def _admit(self, req: Request, slot: int, extras: dict[str, Any]):
-        """Prefill one request and splice its cache into the batch cache."""
-        toks = jnp.asarray(req.prompt)[None]
-        batch = {"tokens": toks, **extras}
-        logits, cache1 = self.prefill(self.params, batch)
+    def _admit(self, req: Request, slot: int, extras: dict[str, Any]
+               ) -> bool:
+        """Prefill one request at its bucketed length and splice its
+        cache into the slot.  Returns False (admitting nothing) when the
+        paged pool cannot cover the bucket — the request stays queued."""
+        plen = len(req.prompt)
+        if plen > self.buckets[-1]:
+            raise ValueError(f"request {req.rid}: prompt of {plen} tokens "
+                             f"exceeds the largest bucket "
+                             f"{self.buckets[-1]}")
+        bucket, plan = self.plans.get(plen, "prefill")
+        req.bucket = bucket
+        if self.paged and not self.kv.allocate(slot, bucket):
+            return False
 
-        def splice(path, full, one):
-            """Insert request-batch-1 state into this slot of the batch
-            cache, padding the request's seq dims up to the engine max.
+        padded = np.zeros(bucket, np.int32)
+        padded[:plen] = req.prompt
+        batch = {"tokens": jnp.asarray(padded)[None], **extras}
+        fn = self._prefill_fn(bucket, plan)
+        # bucket padding is on the right; the prompt's real last token
+        # sits at plen-1 and decode overwrites the pad KV in place
+        logits, cache1 = fn(self.params, batch, jnp.int32(plen - 1))
 
-            The batch axis is structural, not inferred from extents
-            (slot-count 1 made every axis look like batch): stacked
-            'layers' caches carry a leading layer dim → batch is axis 1;
-            remainder/unstacked caches → axis 0."""
-            names = [str(k.key) for k in path
-                     if isinstance(k, jax.tree_util.DictKey)]
-            ax = 1 if names and names[0] == "layers" else 0
-            if one.shape[ax + 1:] != full.shape[ax + 1:]:
-                pads = [(0, 0)] * one.ndim
-                for d in range(ax + 1, one.ndim):
-                    pads[d] = (0, full.shape[d] - one.shape[d])
-                one = jnp.pad(one, pads)
-            return _dus_axis(full, jnp.take(one, 0, axis=ax), slot, ax)
+        if self.paged:
+            self.kv.write_prefill(slot, cache1, bucket)
+        else:
+            def splice(path, full, one):
+                """Insert request-batch-1 state into this slot of the
+                batch cache, padding the request's seq dims up to the
+                engine max.
 
-        self.cache = jax.tree_util.tree_map_with_path(
-            splice, self.cache, cache1)
+                The batch axis is structural, not inferred from extents
+                (slot-count 1 made every axis look like batch): stacked
+                'layers' caches carry a leading layer dim → batch is
+                axis 1; remainder/unstacked caches → axis 0."""
+                names = [str(k.key) for k in path
+                         if isinstance(k, jax.tree_util.DictKey)]
+                ax = 1 if names and names[0] == "layers" else 0
+                if one.shape[ax + 1:] != full.shape[ax + 1:]:
+                    pads = [(0, 0)] * one.ndim
+                    for d in range(ax + 1, one.ndim):
+                        pads[d] = (0, full.shape[d] - one.shape[d])
+                    one = jnp.pad(one, pads)
+                return _dus_axis(full, jnp.take(one, 0, axis=ax), slot, ax)
+
+            self.cache = jax.tree_util.tree_map_with_path(
+                splice, self.cache, cache1)
+
         self.active[slot] = req
-        self.pos[slot] = len(req.prompt)
+        self.pos[slot] = plen
         req.out.append(int(jnp.argmax(logits[0, -1])))
+        req.t_admitted = time.perf_counter()
         self.stats["prefills"] += 1
+        adm = self.stats["bucket_admissions"]
+        adm[bucket] = adm.get(bucket, 0) + 1
+        return True
 
     # ------------------------------------------------------------------
+    def _evict(self, slot: int) -> None:
+        self.active[slot] = None
+        self.pos[slot] = 0
+        if self.paged:
+            self.kv.release(slot)
+
     def step(self):
-        """One batched decode step for all active slots."""
+        """One batched decode step for all active slots (each at its own
+        position)."""
+        # steady-state plan lookup: after warmup this always hits; a miss
+        # (or a changed plan object) would force a re-jit — counted as a
+        # replan, and gated to zero in bench_serve
+        _, plan = self.plans.get(1, "decode")
+        if plan is not self._decode_fn_plan:
+            self._decode_fn = self._build_decode(plan)
+            self._decode_fn_plan = plan
+            self.decode_plan = plan
+            self.stats["replans"] += 1
+
         tok = np.zeros((self.slots, 1), np.int32)
+        live = np.zeros(self.slots, bool)
         for i, r in enumerate(self.active):
             if r is not None and not r.done:
                 tok[i, 0] = r.out[-1]
-        pos = int(max((self.pos[i] for i, r in enumerate(self.active)
-                       if r is not None), default=0))
-        logits, self.cache = self.decode(
-            self.params, self.cache, jnp.asarray(tok), jnp.int32(pos))
+                live[i] = True
+
+        if self.paged:
+            wblk = np.zeros(self.slots, np.int32)
+            woff = np.zeros(self.slots, np.int32)
+            for i in range(self.slots):
+                if live[i]:
+                    if not self.kv.allocate(i, int(self.pos[i]) + 1):
+                        raise RuntimeError(
+                            f"KV pool exhausted growing slot {i} at pos "
+                            f"{int(self.pos[i])} "
+                            f"({self.kv.free_blocks} free blocks)")
+                    wblk[i], woff[i] = self.kv.write_coords(
+                        i, int(self.pos[i]))
+                # dead slots keep (0, 0): the scratch page
+            logits, self.kv.pool = self._decode_fn(
+                self.params, self.kv.pool, self.kv.table_array(),
+                jnp.asarray(tok), jnp.asarray(self.pos),
+                jnp.asarray(wblk), jnp.asarray(woff))
+        else:
+            if self._vector_pos:
+                pos = jnp.asarray(self.pos)
+            else:
+                pos = jnp.int32(int(max(
+                    (self.pos[i] for i, r in enumerate(self.active)
+                     if r is not None), default=0)))
+            logits, self.cache = self._decode_fn(
+                self.params, self.cache, jnp.asarray(tok), pos)
+
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+        now = time.perf_counter()
         for i, r in enumerate(self.active):
             if r is None or r.done:
                 continue
@@ -203,20 +471,60 @@ class ServeEngine:
             if t == self.eos or len(r.out) >= r.max_new \
                     or self.pos[i] >= self.max_seq - 1:
                 r.done = True
+                r.t_done = now
         self.stats["decode_steps"] += 1
 
-    def run(self, requests: list[Request], extras: dict[str, Any]):
+    def run(self, requests: list[Request], extras: dict[str, Any],
+            arrivals: list[float] | None = None):
+        """Serve ``requests`` to completion.
+
+        ``arrivals`` (seconds from run start, one per request, sorted)
+        switches to an open-loop arrival process: request *i* only
+        becomes admissible once its arrival time has passed, and
+        ``Request.latency_s`` measures arrival → completion including
+        queueing.  None keeps the closed-loop behavior (everything
+        arrives at t=0)."""
+        if arrivals is not None:
+            if len(arrivals) != len(requests):
+                raise ValueError("one arrival time per request")
+            for r, a in zip(requests, arrivals):
+                r.arrival_s = float(a)
+        t0 = time.perf_counter()
+        for r in requests:
+            r.t_arrival = t0 + r.arrival_s
         queue = list(requests)
         done: list[Request] = []
         while queue or any(r is not None for r in self.active):
+            now = time.perf_counter()
+            admitted_any = False
             for i in range(self.slots):
                 r = self.active[i]
                 if r is not None and r.done:
                     done.append(r)
-                    self.active[i] = None
-                if self.active[i] is None and queue:
-                    self._admit(queue.pop(0), i, extras)
-            if not any(r is not None and not r.done for r in self.active):
+                    self._evict(i)
+                if (self.active[i] is None and queue
+                        and queue[0].t_arrival <= now):
+                    if self._admit(queue[0], i, extras):
+                        queue.pop(0)
+                        admitted_any = True
+                    else:
+                        break       # paged pool full: wait for evictions
+            have_live = any(r is not None and not r.done
+                            for r in self.active)
+            if not have_live:
+                if admitted_any:
+                    continue
+                if queue:
+                    wait = queue[0].t_arrival - time.perf_counter()
+                    if wait > 0:
+                        time.sleep(min(wait, 0.05))
+                        continue
+                    if all(r is None for r in self.active):
+                        # head request arrived but cannot be admitted and
+                        # nothing is running to free pages
+                        raise RuntimeError(
+                            "deadlock: KV pool too small to admit request "
+                            f"{queue[0].rid} with every slot empty")
                 continue
             self.step()
         return done
@@ -224,6 +532,14 @@ class ServeEngine:
 
 def _dus_axis(full, val, idx, ax):
     return jax.lax.dynamic_update_index_in_dim(full, val, idx, ax)
+
+
+def poisson_arrivals(n: int, rate_per_s: float, seed: int = 0
+                     ) -> list[float]:
+    """Cumulative exponential inter-arrival times (open-loop process)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate_per_s, 1e-9), size=n)
+    return list(np.cumsum(gaps))
 
 
 def main() -> None:
@@ -236,6 +552,18 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--target", default=None,
+                    help="planning target preset (default: auto-detect)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="paged-KV page length in tokens")
+    ap.add_argument("--dense-kv", action="store_true",
+                    help="force the dense per-slot cache")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-loop Poisson arrival rate (req/s); "
+                    "default: all requests arrive at t=0")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome-tracing timeline of the decode "
+                    "plan's simulated schedule to this path")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -251,27 +579,63 @@ def main() -> None:
             (1, cfg.encoder_seq, cfg.d_model), cfg.dtype)
 
     rng = np.random.default_rng(args.seed)
+    # mixed prompt lengths exercise the bucket ladder + per-slot decode
+    lens = rng.integers(max(1, args.prompt_len // 2), args.prompt_len + 1,
+                        size=args.requests)
     reqs = [Request(i, rng.integers(2, cfg.vocab_size,
-                                    size=args.prompt_len).astype(np.int32),
+                                    size=int(lens[i])).astype(np.int32),
                     args.max_new)
             for i in range(args.requests)]
+    target = hw.get_target(args.target) if args.target else None
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
-                      max_seq=args.max_seq)
+                      max_seq=args.max_seq, target=target,
+                      block_size=args.block_size,
+                      paged=False if args.dense_kv else None)
+    report = eng.plan_report()
+    print(f"FTL serving plans on {report['target']} "
+          f"(buckets {report['buckets']}, "
+          f"{'paged' if eng.paged else 'dense'} KV):")
+    for phase in ("prefill", "decode"):
+        e = report[phase]
+        if e is None:
+            print(f"  {phase}: no plannable block")
+            continue
+        print(f"  {phase} @ m={e['m']}: schedule={e['schedule']} "
+              f"cuts={e['cuts']} executors={e['executors']}")
+    if report["decode_differs_from_prefill"]:
+        print("  decode cuts differ from prefill (memory-bound m=1 DP)")
     if eng.block_plan is not None:
-        print(f"FTL plan target: {eng.block_plan.target.describe()}")
-        print(eng.block_plan.summary())
         exec_stats = eng.execute_block_plan()
         if exec_stats is not None:
             print(f"block plan executed @ m={args.max_seq}: "
                   f"{exec_stats['ms']} ms, executors "
                   f"{exec_stats['executors']}")
+    if args.trace:
+        from repro.sim import write_chrome_trace
+        plan = eng.decode_plan or eng.block_plan
+        if plan is not None:
+            write_chrome_trace(plan, args.trace)
+            print(f"decode-plan timeline written to {args.trace}")
+
+    eng.warmup_compile(extras)
+    arrivals = (poisson_arrivals(args.requests, args.arrival_rate,
+                                 args.seed)
+                if args.arrival_rate else None)
     t0 = time.time()
-    done = eng.run(reqs, extras)
+    done = eng.run(reqs, extras, arrivals=arrivals)
     dt = time.time() - t0
+    lat = sorted(r.latency_s for r in done)
+    p50 = lat[len(lat) // 2] if lat else 0.0
+    p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))] if lat else 0.0
     print(f"served {len(done)} requests, {eng.stats['tokens']} tokens "
           f"in {dt:.1f}s ({eng.stats['tokens']/max(dt,1e-9):.1f} tok/s); "
           f"{eng.stats['decode_steps']} decode steps, "
-          f"{eng.stats['prefills']} prefills")
+          f"{eng.stats['prefills']} prefills, "
+          f"p50 {1e3*p50:.0f} ms / p99 {1e3*p99:.0f} ms")
+    pc = eng.plans.counters()
+    print(f"plan cache: {pc['plans']} plans, {pc['hits']} hits, "
+          f"{pc['misses']} misses ({pc['misses_after_warmup']} after "
+          f"warmup), {eng.stats['replans']} decode replans")
     for r in done[:3]:
         print(f"  req {r.rid}: {len(r.out)} tokens: {r.out[:10]}...")
 

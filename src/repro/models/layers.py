@@ -200,7 +200,7 @@ def masked_decode_attention(
     q: jax.Array,        # (B, H, 1, Dh)
     k: jax.Array,        # (B, S, Hk, Dh)
     v: jax.Array,        # (B, S, Hk, Dh)
-    mask: jax.Array,     # (S,) bool — valid cache slots
+    mask: jax.Array,     # (S,) or (B, S) bool — valid cache slots
 ) -> jax.Array:
     b, hq = q.shape[0], q.shape[1]
     hk = k.shape[2]
@@ -214,7 +214,11 @@ def masked_decode_attention(
     vf = v.transpose(0, 2, 1, 3)
     s = jnp.einsum("bhgd,bhsd->bhgs", qg, kf,
                    preferred_element_type=jnp.float32) * dh ** -0.5
-    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    # (B, S) masks carry per-row validity (continuous batching decodes
+    # slots at mixed sequence lengths); (S,) is the uniform-length case
+    mvalid = mask[None, None, None, :] if mask.ndim == 1 \
+        else mask[:, None, None, :]
+    s = jnp.where(mvalid, s, -1e30)
     pmax = s.max(-1, keepdims=True)
     e = jnp.exp(s - pmax)
     o = jnp.einsum("bhgs,bhsd->bhgd", e.astype(v.dtype), vf,
@@ -228,13 +232,18 @@ def attention_decode(
     p: Params,
     x: jax.Array,                  # (B, 1, D)
     cache: Params,                 # {"k": (B, S, Hk, Dh), "v": ..., ["cross_k"/"cross_v"]}
-    pos: jax.Array,                # scalar int32 — absolute position
+    pos: jax.Array,                # () or (B,) int32 — absolute position(s)
     *,
     window: int | None = None,
     cross: bool = False,
     use_rope: bool = True,
 ) -> tuple[jax.Array, Params]:
-    """One-token decode with KV cache (full or ring-buffered local)."""
+    """One-token decode with KV cache (full or ring-buffered local).
+
+    ``pos`` may be a scalar (every row appends at the same position — the
+    uniform-length path) or a ``(B,)`` vector for continuous batching at
+    mixed sequence lengths: each row writes its new KV at its own
+    position and masks its own prefix."""
     h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     b = x.shape[0]
     q = _split_heads(linear(p["wq"], x), h)          # (B, 1, H, Dh)
@@ -249,27 +258,56 @@ def attention_decode(
 
     k_new = _split_heads(linear(p["wk"], x), hk)     # (B, 1, Hk, Dh)
     v_new = _split_heads(linear(p["wv"], x), hk)
+    pos = jnp.asarray(pos)
+    vec = pos.ndim == 1
     if use_rope:
-        posv = pos[None] if pos.ndim == 0 else pos
+        # (B, 1) positions rope each row at its own absolute position
+        posv = pos[:, None] if vec else pos[None]
         q = rope(q, posv, cfg.rope_theta)
         k_new = rope(k_new, posv, cfg.rope_theta)
+
+    def _dus_rows(full, upd, starts):
+        # per-row dynamic update: row i writes its (1, Hk, Dh) slice at
+        # its own seq position starts[i]
+        return jax.vmap(
+            lambda f, u, s: jax.lax.dynamic_update_slice_in_dim(f, u, s, 0)
+        )(full, upd, starts)
 
     s_max = cache["k"].shape[1]
     if window is not None and s_max == window:
         # ring buffer: slot j holds the latest position p ≤ pos with p%W==j
         slot = pos % window
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, 1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, 1)
-        j = jnp.arange(window)
-        slot_pos = pos - ((pos - j) % window)
-        mask = slot_pos >= 0
+        if vec:
+            k = _dus_rows(cache["k"], k_new, slot)
+            v = _dus_rows(cache["v"], v_new, slot)
+            j = jnp.arange(window)
+            mask = (pos[:, None] - ((pos[:, None] - j[None, :]) % window)
+                    ) >= 0
+        else:
+            k = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new, slot, 1)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new, slot, 1)
+            j = jnp.arange(window)
+            slot_pos = pos - ((pos - j) % window)
+            mask = slot_pos >= 0
     else:
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, 1)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, 1)
-        kpos = jnp.arange(s_max)
-        mask = kpos <= pos
-        if window is not None:
-            mask &= kpos > pos - window
+        if vec:
+            k = _dus_rows(cache["k"], k_new, pos)
+            v = _dus_rows(cache["v"], v_new, pos)
+            kpos = jnp.arange(s_max)
+            mask = kpos[None, :] <= pos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > pos[:, None] - window
+        else:
+            k = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new, pos, 1)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new, pos, 1)
+            kpos = jnp.arange(s_max)
+            mask = kpos <= pos
+            if window is not None:
+                mask &= kpos > pos - window
     k = constrain(k, "kv_cache")
     v = constrain(v, "kv_cache")
     o = masked_decode_attention(q.transpose(0, 2, 1, 3), k, v, mask)
@@ -306,8 +344,8 @@ def init_mlp(cfg, key, d_ff: int | None = None) -> Params:
     return p
 
 
-def mlp_layer(cfg, p: Params, x: jax.Array, *, ftl_mode: str | None = None
-              ) -> jax.Array:
+def mlp_layer(cfg, p: Params, x: jax.Array, *, ftl_mode: str | None = None,
+              plan=None) -> jax.Array:
     """MLP dispatched through the FTL executor registry.
 
     off   — layer-per-layer jnp: the hidden tensor is materialized (XLA
@@ -318,17 +356,31 @@ def mlp_layer(cfg, p: Params, x: jax.Array, *, ftl_mode: str | None = None
             the executor (Pallas fused kernel on TPU, scan executor for a
             fused/partial schedule elsewhere, baseline when the planner
             rejects fusion).
+
+    ``plan`` (a :class:`~repro.core.ftl.registry.BlockPlan`) makes the
+    plan's own MLP binding authoritative under 'auto' — the serving path
+    threads its phase-specific prefill/decode plans here so the MLP runs
+    through the executor the plan bound (requalified at the runtime
+    shape), instead of re-planning an MLP-only graph.  Override modes
+    ('off'/'fused'/'scan') keep their meaning either way.
     """
     mode = ftl_mode if ftl_mode is not None else cfg.ftl_mode
     wg = p.get("wg", {}).get("w")
     b1 = p["w1"].get("b")
     b2 = p["w2"].get("b")
     w1, w2 = p["w1"]["w"], p["w2"]["w"]
-    exe = registry.mlp_executor(
-        mode,
-        m=x.shape[-2], d_model=w1.shape[0], d_ff=w1.shape[1],
-        dtype=str(x.dtype), gated=wg is not None, act=cfg.mlp_act,
-    )
+    if plan is not None:
+        from repro.core.ftl import executor_block  # lazy: no cycle
+        exe = executor_block.resolve_mlp(
+            plan, mode, x.shape[-2], str(x.dtype),
+            d_model=w1.shape[0], d_ff=w1.shape[1], gated=wg is not None,
+        )
+    else:
+        exe = registry.mlp_executor(
+            mode,
+            m=x.shape[-2], d_model=w1.shape[0], d_ff=w1.shape[1],
+            dtype=str(x.dtype), gated=wg is not None, act=cfg.mlp_act,
+        )
     return exe.run(x, w1, w2, wg, b1, b2, act=cfg.mlp_act)
 
 

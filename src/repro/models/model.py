@@ -122,15 +122,16 @@ def _apply_mixer(cfg, p: Params, kind: str, x, *, positions, ctx):
     raise ValueError(kind)
 
 
-def _apply_ffn(cfg, p: Params, x):
-    """Returns (delta, aux)."""
+def _apply_ffn(cfg, p: Params, x, plan=None):
+    """Returns (delta, aux).  ``plan`` routes the MLP through its
+    BlockPlan binding (serving's phase-split plans); None re-resolves."""
     if "moe" in p:
         h = norm(p["ln2"], x, cfg.norm)
         y, aux = moe_layer(cfg, p["moe"], h)
         return y, aux
     if "mlp" in p:
         h = norm(p["ln2"], x, cfg.norm)
-        return mlp_layer(cfg, p["mlp"], h), jnp.float32(0.0)
+        return mlp_layer(cfg, p["mlp"], h, plan=plan), jnp.float32(0.0)
     return jnp.zeros_like(x), jnp.float32(0.0)
 
 
@@ -247,6 +248,59 @@ def _block_plan(cfg, m: int, dtype: str, target=None, autotune=None):
     return _block_plan_cached(cfg, m, dtype, target, autotune)
 
 
+# ---------------------------------------------------------------------------
+# serving plan cache: bucketed prefill shapes + phase-split plans
+# ---------------------------------------------------------------------------
+
+# The prefill bucket ladder: prompts are padded up to the next rung so the
+# number of distinct prefill plans (and jit compilations) is bounded by
+# the ladder length, not by the number of distinct prompt lengths.
+PREFILL_BUCKETS: tuple[int, ...] = (8, 16, 32, 64, 128, 256, 512, 1024,
+                                    2048, 4096)
+
+
+def bucket_m(m: int, buckets: tuple[int, ...] = PREFILL_BUCKETS) -> int:
+    """Smallest bucket ≥ ``m``.  Raises when ``m`` exceeds the ladder —
+    serving must reject (or truncate) prompts longer than its max bucket
+    rather than silently compiling an unbounded set of shapes."""
+    if m <= 0:
+        raise ValueError(f"bucket_m needs m >= 1, got {m}")
+    for b in buckets:
+        if b >= m:
+            return b
+    raise ValueError(
+        f"m={m} exceeds the largest prefill bucket {max(buckets)}")
+
+
+@functools.lru_cache(maxsize=512)
+def _serve_plan_cached(cfg, m: int, dtype: str, target, phase: str):
+    try:
+        return ftl_registry.plan_block(cfg, m=m, dtype=dtype, target=target,
+                                       phase=phase)
+    except (ValueError, InfeasibleError):
+        return None
+
+
+def serve_plan(cfg, *, m: int, dtype: str | None = None, target=None,
+               phase: str = "prefill",
+               buckets: tuple[int, ...] = PREFILL_BUCKETS):
+    """(bucketed m, BlockPlan-or-None) for one serving regime.
+
+    The plan cache is keyed ``(cfg, bucketed m, dtype, target, phase)``:
+    prefill shapes bucket through the ladder so every request in a bucket
+    reuses one plan; decode always plans at ``m=1`` through the same
+    partition DP — memory-bound, so it generally cuts differently than
+    prefill (pinned on ``rv32_npu`` in tests/test_serve.py).  Unlike
+    :func:`_block_plan` this does not gate on ``cfg.ftl_mode`` — serving
+    always wants the plan for reporting/qualification, and the executors
+    honor the mode at dispatch.  None when nothing is plannable (pure
+    SSM, MoE)."""
+    target = target if target is not None else hw.default_target()
+    dtype = dtype if dtype is not None else cfg.dtype
+    mb = 1 if phase == "decode" else bucket_m(m, buckets)
+    return mb, _serve_plan_cached(cfg, mb, dtype, target, phase)
+
+
 # ===========================================================================
 # embeddings
 # ===========================================================================
@@ -338,7 +392,7 @@ def forward(cfg, params: Params, batch: dict[str, jax.Array]
 # ---------------------------------------------------------------------------
 
 def _layer_prefill(cfg, p: Params, kind: str, x, *, positions, ctx,
-                   max_seq: int | None = None):
+                   max_seq: int | None = None, plan=None):
     """Returns (x, cache)."""
     if kind in ("attn", "local"):
         h = norm(p["ln1"], x, cfg.norm)
@@ -365,11 +419,12 @@ def _layer_prefill(cfg, p: Params, kind: str, x, *, positions, ctx,
         x = x + o
     else:
         raise ValueError(kind)
-    d, _ = _apply_ffn(cfg, p, x)
+    d, _ = _apply_ffn(cfg, p, x, plan=plan)
     return constrain(x + d, "residual"), cache
 
 
-def _layer_decode(cfg, p: Params, kind: str, x, cache: Params, pos):
+def _layer_decode(cfg, p: Params, kind: str, x, cache: Params, pos,
+                  plan=None):
     """One-token step.  Returns (x, new_cache)."""
     if kind in ("attn", "local"):
         h = norm(p["ln1"], x, cfg.norm)
@@ -392,7 +447,7 @@ def _layer_decode(cfg, p: Params, kind: str, x, cache: Params, pos):
         x = x + o
     else:
         raise ValueError(kind)
-    d, _ = _apply_ffn(cfg, p, x)
+    d, _ = _apply_ffn(cfg, p, x, plan=plan)
     return constrain(x + d, "residual"), cache
 
 
@@ -441,13 +496,22 @@ def init_cache(cfg, batch: int, seq: int) -> Params:
 
 
 def prefill(cfg, params: Params, batch: dict[str, jax.Array],
-            max_seq: int | None = None) -> tuple[jax.Array, Params]:
+            max_seq: int | None = None, *, plan=None,
+            last_pos: jax.Array | None = None) -> tuple[jax.Array, Params]:
     """Process the full prompt; returns (last-token logits, decode cache).
 
     ``max_seq`` right-pads KV caches so subsequent decode steps append in
-    place (required whenever decoding continues past the prompt)."""
+    place (required whenever decoding continues past the prompt).
+
+    ``plan`` threads a (bucketed) prefill BlockPlan into every layer's
+    MLP dispatch — the serving path's plan-cache entry for this shape.
+    ``last_pos`` (traced scalar) returns the logits at that token index
+    instead of the final one: bucketed serving right-pads prompts up to
+    the bucket, so the prompt's true last token sits at
+    ``len(prompt) - 1``, not at ``bucket - 1``."""
     if cfg.is_encoder_decoder:
-        return _prefill_encdec(cfg, params, batch, max_seq)
+        return _prefill_encdec(cfg, params, batch, max_seq,
+                               last_pos=last_pos)
     tokens = batch["tokens"]
     s = tokens.shape[1]
     positions = jnp.arange(s)
@@ -461,7 +525,7 @@ def prefill(cfg, params: Params, batch: dict[str, jax.Array],
         for i, kind in enumerate(kinds):
             h, c = _layer_prefill(cfg, pp[f"pos{i}"], kind, h,
                                   positions=positions, ctx=ctx,
-                                  max_seq=max_seq)
+                                  max_seq=max_seq, plan=plan)
             caches[f"pos{i}"] = c
         return h, caches
 
@@ -476,16 +540,29 @@ def prefill(cfg, params: Params, batch: dict[str, jax.Array],
         for i, kind in enumerate(rem_kinds):
             x, c = _layer_prefill(cfg, params["rem"][f"rem{i}"], kind, x,
                                   positions=positions, ctx=ctx,
-                                  max_seq=max_seq)
+                                  max_seq=max_seq, plan=plan)
             cache["rem"][f"rem{i}"] = c
     x = norm(params["final_norm"], x, cfg.norm)
-    logits = _unembed(cfg, params, x[:, -1:])
+    logits = _unembed(cfg, params, _last_tokens(x, last_pos))
     return logits, cache
 
 
+def _last_tokens(x: jax.Array, last_pos: jax.Array | None) -> jax.Array:
+    """(B, S, D) → (B, 1, D) at ``last_pos`` (None → the final position)."""
+    if last_pos is None:
+        return x[:, -1:]
+    return jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+
+
 def decode_step(cfg, params: Params, token: jax.Array, cache: Params,
-                pos: jax.Array) -> tuple[jax.Array, Params]:
-    """One decode step: ``token`` (B, 1) + cache @ ``pos`` → (logits, cache)."""
+                pos: jax.Array, *, plan=None) -> tuple[jax.Array, Params]:
+    """One decode step: ``token`` (B, 1) + cache @ ``pos`` → (logits, cache).
+
+    ``pos`` is a scalar (uniform batch) or a ``(B,)`` vector — continuous
+    batching decodes slots at mixed sequence lengths, each row appending
+    and masking at its own position (encoder-decoder configs are
+    scalar-only: their sinusoidal offset is uniform).  ``plan`` threads
+    the m=1 decode BlockPlan into every layer's MLP dispatch."""
     if cfg.is_encoder_decoder:
         return _decode_encdec(cfg, params, token, cache, pos)
     kinds, _, rem_kinds = _layer_split(cfg)
@@ -496,7 +573,7 @@ def decode_step(cfg, params: Params, token: jax.Array, cache: Params,
         new = {}
         for i, kind in enumerate(kinds):
             h, c = _layer_decode(cfg, pp[f"pos{i}"], kind, h,
-                                 cc[f"pos{i}"], pos)
+                                 cc[f"pos{i}"], pos, plan=plan)
             new[f"pos{i}"] = c
         return h, new
 
@@ -507,7 +584,7 @@ def decode_step(cfg, params: Params, token: jax.Array, cache: Params,
         new_cache["rem"] = {}
         for i, kind in enumerate(rem_kinds):
             x, c = _layer_decode(cfg, params["rem"][f"rem{i}"], kind, x,
-                                 cache["rem"][f"rem{i}"], pos)
+                                 cache["rem"][f"rem{i}"], pos, plan=plan)
             new_cache["rem"][f"rem{i}"] = c
     x = norm(params["final_norm"], x, cfg.norm)
     return _unembed(cfg, params, x), new_cache
@@ -624,7 +701,8 @@ def _init_cache_encdec(cfg, batch: int, seq: int) -> Params:
     return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers))}
 
 
-def _prefill_encdec(cfg, params: Params, batch, max_seq: int | None = None
+def _prefill_encdec(cfg, params: Params, batch, max_seq: int | None = None,
+                    *, last_pos: jax.Array | None = None
                     ) -> tuple[jax.Array, Params]:
     enc_out = _encode(cfg, params, batch["frames"])
     tokens = batch["tokens"]
@@ -651,7 +729,8 @@ def _prefill_encdec(cfg, params: Params, batch, max_seq: int | None = None
 
     x, caches = jax.lax.scan(body, x, params["layers"])
     x = norm(params["final_norm"], x, cfg.norm)
-    return _unembed(cfg, params, x[:, -1:]), {"layers": caches}
+    return _unembed(cfg, params, _last_tokens(x, last_pos)), {
+        "layers": caches}
 
 
 def _decode_encdec(cfg, params: Params, token, cache, pos

@@ -182,24 +182,37 @@ def to_shardings_tree(spec_tree, mesh: Mesh):
 # serving steps
 # ===========================================================================
 
-def make_prefill_step(cfg, mesh: Mesh | None):
+def make_prefill_step(cfg, mesh: Mesh | None, *, max_seq: int | None = None,
+                      plan=None):
+    """Prefill step builder.  ``plan`` threads a (bucketed) prefill
+    BlockPlan through the model's MLP dispatch; ``max_seq`` right-pads the
+    returned caches for in-place decode appends.  The returned step takes
+    an optional traced ``last_pos`` so bucket-padded prompts read their
+    logits at the true last token, not the pad tail."""
     policy = make_activation_policy(mesh, cfg) if mesh is not None else None
 
-    def step_fn(params: Params, batch: dict):
+    def step_fn(params: Params, batch: dict,
+                last_pos: jax.Array | None = None):
         with use_policy(policy):
-            return M.prefill(cfg, params, batch)
+            return M.prefill(cfg, params, batch, max_seq=max_seq,
+                             plan=plan, last_pos=last_pos)
 
     return step_fn
 
 
-def make_decode_step(cfg, mesh: Mesh | None):
-    """serve_step for the decode cells: one token against a full cache."""
+def make_decode_step(cfg, mesh: Mesh | None, *, plan=None):
+    """serve_step for the decode cells: one token against a full cache.
+
+    ``pos`` may be a scalar or a per-row ``(B,)`` vector (mixed sequence
+    lengths under continuous batching); ``plan`` threads the m=1 decode
+    BlockPlan through the model's MLP dispatch."""
     policy = make_activation_policy(mesh, cfg) if mesh is not None else None
 
     def step_fn(params: Params, cache: Params, token: jax.Array,
                 pos: jax.Array):
         with use_policy(policy):
-            logits, new_cache = M.decode_step(cfg, params, token, cache, pos)
+            logits, new_cache = M.decode_step(cfg, params, token, cache,
+                                              pos, plan=plan)
             return logits, new_cache
 
     return step_fn

@@ -78,3 +78,200 @@ def test_engine_batched_equals_single(setup):
     by_rid = {r.rid: r.out for r in done}
     assert by_rid[0] == solo[0]
     assert by_rid[1] == solo[1]
+
+
+# ---------------------------------------------------------------------------
+# continuous batching on planned schedules: mixed lengths, paged KV,
+# bucket ladder, split prefill/decode plans
+# ---------------------------------------------------------------------------
+
+from repro.core import hw                                   # noqa: E402
+from repro.core.ftl import registry as ftl_registry          # noqa: E402
+from repro.launch import kv_cache as KV                      # noqa: E402
+from repro.launch.serve import poisson_arrivals              # noqa: E402
+
+
+def test_engine_mixed_lengths_match_reference(setup):
+    """Two slots at different positions (5- and 11-token prompts) decode
+    together; each must match its solo no-engine greedy loop — the
+    per-slot position vector plus bucket padding at work."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 11)]
+    n_new = 5
+    refs = [greedy_reference(cfg, params, p, n_new) for p in prompts]
+
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=32, eos_id=-1)
+    done = eng.run([Request(i, p, n_new) for i, p in enumerate(prompts)],
+                   {})
+    by_rid = {r.rid: r.out for r in done}
+    assert by_rid[0][:n_new] == refs[0]
+    assert by_rid[1][:n_new] == refs[1]
+    # the two prompts landed in different prefill buckets
+    assert sorted(eng.stats["bucket_admissions"]) == [8, 16]
+
+
+def test_paged_equals_dense(setup):
+    """The paged KV cache (block pool + tables + gather/scatter) is a
+    pure layout change: token streams must match the dense cache."""
+    cfg, params = setup
+    assert KV.paged_supported(cfg)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 11, 8, 3)]
+    reqs = lambda: [Request(i, p, 4) for i, p in enumerate(prompts)]  # noqa: E731
+
+    eng_p = ServeEngine(cfg, params, batch_slots=2, max_seq=32,
+                        block_size=8, eos_id=-1)
+    assert eng_p.paged
+    out_p = {r.rid: r.out for r in eng_p.run(reqs(), {})}
+    eng_d = ServeEngine(cfg, params, batch_slots=2, max_seq=32,
+                        paged=False, eos_id=-1)
+    out_d = {r.rid: r.out for r in eng_d.run(reqs(), {})}
+    assert out_p == out_d
+
+
+def test_eviction_returns_pages_and_refills(setup):
+    """EOS/max-len eviction frees a slot *and* its pages; queued requests
+    refill the slot and the pool drains back to full when idle."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    reqs = [Request(i, rng.integers(2, cfg.vocab_size, size=6 + 3 * i)
+                    .astype(np.int32), 3) for i in range(5)]
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=32,
+                      block_size=8, eos_id=-1)
+    total = eng.kv.free_blocks
+    done = eng.run(reqs, {})
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+    assert eng.stats["prefills"] == 5
+    assert all(r is None for r in eng.active)
+    assert eng.kv.free_blocks == total          # every page returned
+
+
+def test_kv_admission_control_under_pressure(setup):
+    """A pool too small for every slot at once defers admission instead
+    of corrupting state; all requests still finish."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    reqs = [Request(i, rng.integers(2, cfg.vocab_size, size=10)
+                    .astype(np.int32), 3) for i in range(4)]
+    # 3 slots x 4 blocks/slot = 12 wanted; give 6 -> at most ~2 active
+    eng = ServeEngine(cfg, params, batch_slots=3, max_seq=32,
+                      block_size=8, kv_blocks=6, eos_id=-1)
+    done = eng.run(reqs, {})
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    assert eng.kv.free_blocks == 6
+
+
+def test_open_loop_arrivals_and_latency(setup):
+    """Open-loop arrivals: requests are only admissible after their
+    arrival time, and latency covers queueing (monotone stamps)."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    reqs = [Request(i, rng.integers(2, cfg.vocab_size, size=6)
+                    .astype(np.int32), 3) for i in range(4)]
+    arr = poisson_arrivals(4, 100.0, seed=1)
+    assert arr == sorted(arr) and len(arr) == 4
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=32, eos_id=-1)
+    done = eng.run(reqs, {}, arrivals=arr)
+    assert len(done) == 4
+    for r in done:
+        assert r.t_admitted >= r.t_arrival
+        assert r.t_done > r.t_admitted
+        assert r.latency_s > 0
+
+
+def test_decode_plan_differs_from_prefill_on_rv32_npu():
+    """The m=1 decode shape runs through the same partition DP and, being
+    memory-bound, picks different cuts than prefill on the NPU-equipped
+    RISC-V hierarchy — the split-plan tentpole, pinned."""
+    cfg = configs.get_config("llama3.2-3b").reduced()
+    tgt = hw.get_target("rv32_npu")
+    _, pre = M.serve_plan(cfg, m=64, target=tgt, phase="prefill")
+    _, dec = M.serve_plan(cfg, m=1, target=tgt, phase="decode")
+    assert pre is not None and dec is not None
+    assert pre.phase == "prefill" and dec.phase == "decode"
+    assert pre.m == 64 and dec.m == 1
+    assert pre.chain.cuts() != dec.chain.cuts()
+
+
+def test_serve_plan_cache_keys_bucket_ladder():
+    """serve_plan is keyed (cfg, bucketed m, dtype, target, phase):
+    requests inside one bucket share a plan object, bucket/phase/target
+    changes never serve a stale plan (mirrors the _block_plan target and
+    autotune key regressions)."""
+    cfg = configs.get_config("llama3.2-3b").reduced()
+    assert M.bucket_m(1) == 8 and M.bucket_m(8) == 8
+    assert M.bucket_m(9) == 16 and M.bucket_m(16) == 16
+    with pytest.raises(ValueError):
+        M.bucket_m(0)
+    with pytest.raises(ValueError):
+        M.bucket_m(M.PREFILL_BUCKETS[-1] + 1)
+
+    tgt = hw.get_target("cpu_cache")
+    m10 = M.serve_plan(cfg, m=10, target=tgt, phase="prefill")
+    m16 = M.serve_plan(cfg, m=16, target=tgt, phase="prefill")
+    assert m10[0] == m16[0] == 16
+    assert m10[1] is m16[1]                     # same bucket -> same plan
+    m17 = M.serve_plan(cfg, m=17, target=tgt, phase="prefill")
+    assert m17[0] == 32 and m17[1] is not m16[1]
+    # decode is its own key at m=1 regardless of the requested m
+    d = M.serve_plan(cfg, m=16, target=tgt, phase="decode")
+    assert d[0] == 1 and d[1] is not m16[1] and d[1].phase == "decode"
+    # a different hierarchy never reuses the cpu_cache plan
+    other = M.serve_plan(cfg, m=16, target=hw.get_target("rv32_l1_l2"),
+                         phase="prefill")
+    assert other[1] is not m16[1]
+
+
+def test_decode_phase_disqualifies_pallas():
+    """Decode-shape qualification: at phase='decode' (m=1) the Pallas
+    kernels drop out even on a TPU-class context and the registry binds
+    the XLA executors; the identical prefill context keeps Pallas."""
+    tgt = hw.get_target("tpu_v5e")
+
+    def names(phase, m):
+        mk = lambda kind, **kw: ftl_registry.ExecContext(    # noqa: E731
+            kind=kind, platform="tpu", schedule="fused", m=m,
+            d_model=768, d_ff=3072, dtype="bfloat16", target=tgt,
+            phase=phase, **kw)
+        return (ftl_registry.find("mlp", mk("mlp")).name,
+                ftl_registry.find("attention",
+                                  mk("attention", head_dim=64)).name,
+                ftl_registry.find("gemm", mk("gemm")).name)
+
+    assert names("prefill", 512) == ("pallas_fused_mlp",
+                                     "pallas_flash_attention",
+                                     "pallas_gemm")
+    assert all(n.startswith("xla_") for n in names("decode", 1))
+    with pytest.raises(ValueError):
+        ftl_registry.plan_block(configs.get_config("llama3.2-3b").reduced(),
+                                m=1, phase="bogus")
+
+
+def test_zero_replans_and_both_phase_executors(setup):
+    """Steady-state decode never replans (100% plan-cache hits after
+    warmup) and the engine reports resolved executors for BOTH serving
+    regimes, mirroring what train logs for its one shape."""
+    cfg, params = setup
+    rng = np.random.default_rng(8)
+    reqs = [Request(i, rng.integers(2, cfg.vocab_size, size=4 + 5 * i)
+                    .astype(np.int32), 4) for i in range(6)]
+    eng = ServeEngine(cfg, params, batch_slots=3, max_seq=32, eos_id=-1)
+    eng.warmup_compile()
+    warm_misses = eng.plans.counters()["misses"]
+    eng.run(reqs, {})
+    after = eng.plans.counters()
+    assert eng.stats["replans"] == 0
+    assert after["misses"] == warm_misses
+    assert after["misses_after_warmup"] == 0
+    assert after["hits"] > 0
+
+    report = eng.plan_report()
+    for phase in ("prefill", "decode"):
+        entry = report[phase]
+        assert entry is not None
+        assert set(entry["executors"]) == {"gemm", "attention", "mlp"}
+    assert report["prefill"]["m"] == max(eng.buckets)
+    assert report["decode"]["m"] == 1
