@@ -1,0 +1,167 @@
+"""Mesh-scaling sweep: collective-aware planning + multi-port overlap
+(the mesh-planning tentpole artifact + CI gate).
+
+For ``tpu_v5e`` (ici port) and the multi-cluster ``rv32_mesh`` preset
+(noc port) this captures a tensor-parallel transformer block at mesh
+sizes 1→8 (:func:`repro.distributed.mesh_capture.capture_block` — the
+per-chip shard with its all-reduces as first-class graph ops), plans it
+with the collective-aware partition DP, and replays the plan through
+the discrete-event simulator three ways:
+
+* **aware** — the collective-aware plan on the multi-port DES (the
+  interconnect stream overlaps memory DMA);
+* **shared-port** — the *same* schedule replayed with every transfer
+  serialized on one DMA cursor (the pre-multi-port model; the
+  counterfactual that prices the overlap win);
+* **blind** — the plan a collective-ignorant DP picks (cuts chosen on
+  the stripped graph, then re-costed with the collectives restored).
+
+Writes ``BENCH_mesh.json`` with modeled + simulated scaling curves and
+an overlap-efficiency column (uploaded by the CI bench-mesh job).
+
+**CI gates** (or the run fails):
+
+* *overlap*: at mesh=2 on **every** preset, the simulated runtime with
+  multi-port overlap must not exceed the serialized single-port
+  replay's prediction — splitting the collective stream onto its own
+  port can only help;
+* *aware-beats-blind*: on **≥ 1** preset/mesh point the collective-aware
+  DP must pick different cuts than the collective-blind DP *and* win on
+  simulated runtime — the reason collectives are in the cost model at
+  all.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro import configs
+from repro.core import hw
+from repro.core.ftl import partition
+from repro.distributed import mesh_capture
+from repro.sim import lower_chain, simulate_chain
+
+from ._smoke import smoke
+
+OUT = "BENCH_mesh.json"
+
+ARCH = "llama3.2-3b"
+MESHES = (1, 2, 4, 8)
+PRESETS = ("tpu_v5e", "rv32_mesh")
+
+
+def _cfg():
+    cfg = configs.get_config(ARCH)
+    return cfg.reduced() if smoke() else cfg
+
+
+def _m(target: hw.Target) -> int:
+    if smoke():
+        return 1024
+    # full mode: big enough that segments tile into multi-step grids on
+    # the TPU (overlap needs a pipeline); the rv32 mesh tiles at any m
+    return 2048 if target.name == "tpu_v5e" else 1024
+
+
+def mesh_row(cfg, target: hw.Target, m: int, n: int) -> dict:
+    t0 = time.perf_counter()
+    g = mesh_capture.capture_block(cfg, m=m, mesh_size=n)
+    aware = partition.plan_chain(g, target=target)
+    blind = mesh_capture.plan_collective_blind(g, target=target)
+    lowered = lower_chain(aware)
+    sim = simulate_chain(lowered)
+    shared = simulate_chain(lowered, share_ports=True)
+    sim_blind = simulate_chain(lower_chain(blind))
+    plan_ms = round(1e3 * (time.perf_counter() - t0), 1)
+    cuts_differ = aware.cuts() != blind.cuts()
+    return {
+        "mesh": n,
+        "sharded": mesh_capture.shard_spec(cfg, n).any,
+        "cuts": list(aware.cuts()),
+        "modeled_runtime_ms": 1e3 * aware.modeled_runtime_s,
+        "sim_runtime_ms": 1e3 * sim.runtime_s,
+        "sim_shared_port_ms": 1e3 * shared.runtime_s,
+        "overlap_win_%": round(
+            100 * (1 - sim.runtime_s / shared.runtime_s), 2)
+        if shared.runtime_s > 0 else 0.0,
+        "overlap_efficiency": sim.overlap_efficiency,
+        "busy_ms": {k: 1e3 * v for k, v in sim.busy_s.items()},
+        "blind_cuts": list(blind.cuts()),
+        "blind_sim_runtime_ms": 1e3 * sim_blind.runtime_s,
+        "cuts_differ": cuts_differ,
+        "aware_beats_blind": bool(
+            cuts_differ
+            and sim.runtime_s < sim_blind.runtime_s),
+        "plan_and_sim_ms": plan_ms,
+    }
+
+
+def target_rows(cfg, target: hw.Target) -> dict:
+    m = _m(target)
+    rows = [mesh_row(cfg, target, m, n) for n in MESHES]
+    base_model = rows[0]["modeled_runtime_ms"]
+    base_sim = rows[0]["sim_runtime_ms"]
+    for r in rows:
+        r["modeled_speedup_vs_1"] = round(
+            base_model / r["modeled_runtime_ms"], 3)
+        r["sim_speedup_vs_1"] = round(base_sim / r["sim_runtime_ms"], 3)
+    at2 = next(r for r in rows if r["mesh"] == 2)
+    gate_overlap = (hw.round_time(at2["sim_runtime_ms"])
+                    <= hw.round_time(at2["sim_shared_port_ms"]))
+    return {
+        "target": target.name,
+        "interconnect": target.interconnect.name,
+        "interconnect_port": target.interconnect.dma_port,
+        "m": m,
+        "mesh_sweep": rows,
+        "gate_overlap_ok": gate_overlap,
+        "aware_beats_blind": any(r["aware_beats_blind"] for r in rows),
+    }
+
+
+def run() -> dict:
+    cfg = _cfg()
+    targets = [target_rows(cfg, hw.get_target(p)) for p in PRESETS]
+    return {
+        "smoke": smoke(),
+        "arch": cfg.name,
+        "meshes": list(MESHES),
+        "gate": "sim with multi-port overlap <= serialized single-port "
+                "replay at mesh=2 on every preset AND collective-aware "
+                "cuts beat collective-blind cuts somewhere",
+        "targets": targets,
+        "gate_overlap_ok": all(t["gate_overlap_ok"] for t in targets),
+        "gate_aware_ok": any(t["aware_beats_blind"] for t in targets),
+    }
+
+
+def main() -> None:
+    result = run()
+    for t in result["targets"]:
+        print(f"{t['target']} (link {t['interconnect']}"
+              f"/{t['interconnect_port']}, m={t['m']}):")
+        for r in t["mesh_sweep"]:
+            mark = " <-- aware wins" if r["aware_beats_blind"] else ""
+            print(f"  mesh {r['mesh']}: sim {r['sim_runtime_ms']:9.3f} ms "
+                  f"(x{r['sim_speedup_vs_1']:.2f} vs mesh=1, overlap eff "
+                  f"{r['overlap_efficiency']:.2f}, win "
+                  f"{r['overlap_win_%']:+.2f}% vs single port), "
+                  f"blind {r['blind_sim_runtime_ms']:9.3f} ms{mark}")
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {OUT}")
+    bad = [t["target"] for t in result["targets"]
+           if not t["gate_overlap_ok"]]
+    if bad:
+        raise RuntimeError(
+            f"mesh overlap gate FAILED on {bad}: multi-port simulated "
+            f"runtime at mesh=2 must not exceed the serialized "
+            f"single-port replay")
+    if not result["gate_aware_ok"]:
+        raise RuntimeError(
+            "mesh planning gate FAILED: collective-aware cuts never "
+            "beat collective-blind cuts on any preset/mesh point")
+
+
+if __name__ == "__main__":
+    main()

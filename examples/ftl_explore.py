@@ -15,9 +15,16 @@ event by event.
 tuner (``repro.tune``); ``--trace out.json`` exports the replayed
 timeline as Chrome-tracing JSON — open it at https://ui.perfetto.dev.
 
+``--mesh N`` plans a tensor-parallel transformer block (``--arch``,
+default llama3.2-3b) at mesh sizes 1→N with its all-reduces captured as
+first-class collective ops, prints the modeled + simulated scaling
+table, and makes the mesh-N plan the one ``--timeline`` / ``--trace``
+render — the trace then shows the collective stream on its own
+``dma:ici`` / ``dma:noc`` track overlapping the memory DMA.
+
 Run:  PYTHONPATH=src python examples/ftl_explore.py [--m 8192] [--d 4096]
       [--f 11008] [--target rv32_npu] [--timeline] [--autotune]
-      [--trace out.json]
+      [--trace out.json] [--mesh 4]
 """
 import argparse
 
@@ -58,6 +65,10 @@ def main() -> None:
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="write the replayed timeline on --target as "
                          "Chrome-tracing JSON (Perfetto-viewable)")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="plan a tensor-parallel block (--arch) at mesh "
+                         "sizes 1..N with collectives as first-class ops; "
+                         "the mesh-N plan feeds --timeline/--trace")
     args = ap.parse_args()
 
     g = graph.mlp_graph(m=args.m, d_model=args.d, d_ff=args.f,
@@ -118,10 +129,35 @@ def main() -> None:
     print("\ngraph partitioner (tpu_v5e):")
     print(chain.summary())
 
-    chosen = partition.plan_chain(g, target=base)
+    # --- mesh scaling: collectives as first-class ops --------------------
+    chosen_graph = g
+    if args.mesh > 1:
+        from repro import configs
+        from repro.distributed import mesh_capture
+        cfg = configs.get_config(args.arch or "llama3.2-3b")
+        meshes = sorted({1, *(n for n in (2, 4, 8, 16) if n < args.mesh),
+                         args.mesh})
+        print(f"\nmesh scaling for {cfg.name} block (m={args.m}) on "
+              f"{base.name}:")
+        print(f"{'mesh':>5} {'modeled ms':>11} {'sim ms':>9} "
+              f"{'speedup':>8} {'eff':>5}  cuts")
+        base_sim = None
+        for n in meshes:
+            gm = mesh_capture.capture_block(cfg, m=args.m, mesh_size=n)
+            chain = partition.plan_chain(gm, target=base)
+            replay = sim.simulate_chain(sim.lower_chain(chain))
+            base_sim = base_sim if base_sim is not None else replay.runtime_s
+            print(f"{n:>5} {1e3 * chain.modeled_runtime_s:11.3f} "
+                  f"{1e3 * replay.runtime_s:9.3f} "
+                  f"{base_sim / replay.runtime_s:7.2f}x "
+                  f"{replay.overlap_efficiency:5.2f}  {chain.cuts()}")
+            if n == args.mesh:
+                chosen_graph = gm
+
+    chosen = partition.plan_chain(chosen_graph, target=base)
     if args.autotune:
         from repro import tune
-        res = tune.autotune_chain(g, target=base)
+        res = tune.autotune_chain(chosen_graph, target=base)
         print(f"\n{res.summary()}")
         chosen = res.chain
 

@@ -46,8 +46,9 @@ from .graph import OpGraph, attention_graph, block_graph, gemm_act_graph, \
 from .ir import Dim, FusionGroup, KernelPolicy, OpNode, Role, TensorSpec
 from .partition import ChainPlan, Segment, all_cuts, plan_chain, plan_fixed
 from .plan import FusionComparison, TilePlan, compare
-from .registry import BlockPlan, ExecContext, Executor, mlp_executor, \
-    plan_block, run_block
+from .registry import BlockPlan, ExecContext, Executor, \
+    clear_plan_caches, mlp_executor, plan_block, plan_cache_stats, \
+    register_plan_cache, run_block
 from .solver import InfeasibleError, solve
 
 __all__ = [
@@ -60,6 +61,7 @@ __all__ = [
     "ChainPlan", "Segment", "all_cuts", "plan_chain", "plan_fixed",
     "BlockPlan", "ExecContext", "Executor", "mlp_executor", "plan_block",
     "run_block",
+    "plan_cache_stats", "clear_plan_caches", "register_plan_cache",
     "build_dim_constraints", "evaluate", "solve", "compare",
     "InfeasibleError",
     "MLPPlanOutcome", "plan_attention", "plan_mlp",
@@ -183,3 +185,8 @@ def plan_attention(
     _deprecated("plan_attention")
     target = target if target is not None else default_target()
     return _plan_attention_cached(q_len, kv_len, head_dim, dtype, target)
+
+
+registry.register_plan_cache("ftl._plan_mlp_cached", _plan_mlp_cached)
+registry.register_plan_cache("ftl._plan_attention_cached",
+                             _plan_attention_cached)

@@ -8,9 +8,20 @@ reports runtime (not bytes) as the win, and LoopTree shows compute-bound
 segments must be priced with a joint latency model — the **modeled
 runtime** that is the solver's objective:
 
-    transfer = Σ_level  bytes(level) / bw(level)  +  transfers(level) · dma_setup(level)
+    port(p)  = Σ_{level on p}  bytes(level) / bw(level)  +  transfers(level) · dma_setup(level)
+    transfer = max_port  port(p)               (Target.transfer_time)
     compute  = per-engine roofline over the group's op kinds
     runtime  = max(compute, transfer)          (hw.modeled_runtime)
+
+Levels sharing a DMA port serialize; distinct ports (hbm vs the ici/noc
+interconnect) overlap, so a segment's collective stream hides under its
+memory traffic — and vice versa — exactly as the DES replays it.  With
+one port in play the max degenerates to the old Σ-over-levels model
+bit-exactly, which keeps every single-chip plan identical.  Collectives
+(:class:`~repro.core.ftl.ir.CollectiveNode`) price their ring-formula
+wire bytes against the target's interconnect level on that level's port
+(:class:`CollectiveCost` entries on the report), independent of the tile
+assignment.
 
 The compute term is priced per op: each op's FLOPs run on the engine
 ``Target.engine_rate`` assigns its kind (the implicit single ``core``
@@ -69,7 +80,7 @@ from typing import Mapping, Sequence
 from repro.core import hw as hwlib
 
 from .constraints import DimConstraint, accumulator_tensors
-from .ir import FusionGroup, OpNode, Role, TensorSpec
+from .ir import CollectiveNode, FusionGroup, OpNode, Role, TensorSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +94,32 @@ class OpCompute:
     flops: int             # raw modeled FLOPs of the op
     utilization: float     # MXU lane-utilization factor in (0, 1]
     seconds: float         # flops / (engine rate · utilization)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCost:
+    """Wire pricing of one :class:`~repro.core.ftl.ir.CollectiveNode` in
+    the group — what the schedule lowering turns into per-step ``Comm``
+    events on the interconnect's DMA port.
+
+    ``pre`` marks a collective whose operand streams *into* the segment
+    (its input tensor's bound role is INPUT): the link traffic can run
+    ahead of the consuming compute like a prefetch.  A collective fed by
+    an in-segment producer (``pre=False``, ``producer`` names the op)
+    starts behind that producer's compute; if its output is also
+    consumed inside the segment (``blocking``) the rest of the step's
+    compute chain waits for the wire — the real serialization cost of
+    fusing a collective mid-chain, which per-step chunking then hides
+    across the tile pipeline."""
+
+    name: str
+    comm: str                # all_gather | reduce_scatter | all_reduce
+    level: str               # interconnect level name (ici / noc)
+    bytes: int               # wire bytes per chip (ring formula)
+    transfers: int           # link messages per chip
+    pre: bool
+    producer: str = ""       # in-segment producer op ("" when streamed)
+    blocking: bool = False   # output consumed later in the segment
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +144,7 @@ class CostReport:
     op_compute: tuple[OpCompute, ...] = ()
     per_engine_compute_s: dict[str, float] = dataclasses.field(
         default_factory=dict)           # engine name -> serialized seconds
+    collectives: tuple[CollectiveCost, ...] = ()
 
     @property
     def modeled_runtime_s(self) -> float:
@@ -256,6 +294,10 @@ def compute_costs(
     eff_total = 0.0
     for op in group.ops:
         f = op.flops(full_sizes)
+        if f == 0:
+            # collectives (flops_per_macs=0) are pure wire traffic: they
+            # occupy no engine, so they never appear in the compute chain
+            continue
         util = lane_utilization(op, tiles)
         if op.kind in overrides:
             engine = overrides[op.kind]
@@ -327,6 +369,44 @@ def evaluate(
     # solver's optimistic full-size prune remains a valid lower bound.
     w_bytes = {n: 1.0 / homes[n].bw_bytes_per_s for n in homes}
     w_dma = {n: homes[n].dma_setup_s for n in homes}
+    w_port = {n: homes[n].dma_port for n in homes}
+
+    # collectives: a fixed wire cost per segment run, priced against the
+    # interconnect level's bandwidth/setup on its own DMA port.  Tile-
+    # independent (the whole payload crosses the link however the grid
+    # tiles), so per-port times stay monotone non-increasing in tile
+    # sizes and the solver's prunes survive.
+    colls = [op for op in group.ops
+             if isinstance(op, CollectiveNode) and op.mesh_size > 1]
+    comm_costs: tuple[CollectiveCost, ...] = ()
+    comm_time_s = 0.0
+    comm_port = None
+    if colls:
+        icl = target.interconnect
+        if icl is None:
+            raise ValueError(
+                f"group {group.name} contains collectives but target "
+                f"{target.name} has no interconnect level to price them on"
+            )
+        comm_port = icl.dma_port
+        costs = []
+        for op in colls:
+            cb = op.comm_bytes(full_sizes)
+            ct = op.comm_transfers(full_sizes)
+            role = group.tensors[op.inputs[0].name].role
+            producer = next(
+                (o.name for o in group.ops
+                 if o is not op and o.output.name == op.inputs[0].name),
+                "")
+            consumed = any(
+                op.output.name in (t.name for t in o.inputs)
+                for o in group.ops if o is not op)
+            costs.append(CollectiveCost(
+                name=op.name, comm=op.comm, level=icl.name,
+                bytes=cb, transfers=ct, pre=role is Role.INPUT,
+                producer=producer, blocking=consumed))
+            comm_time_s += cb / icl.bw_bytes_per_s + ct * icl.dma_setup_s
+        comm_costs = tuple(costs)
 
     def traffic_for(
         ordr: Sequence[str],
@@ -335,7 +415,9 @@ def evaluate(
         fetches_per = {}
         tot = 0
         dma = 0
-        time_s = 0.0
+        port_time: dict[str, float] = {}
+        if comm_port is not None:
+            port_time[comm_port] = comm_time_s
         for t in hbm:
             if t.role is Role.OUTPUT:
                 # accumulated in fast memory; written once per output block
@@ -353,7 +435,12 @@ def evaluate(
             fetches_per[t.name] = fetches
             tot += b
             dma += fetches
-            time_s += b * w_bytes[t.name] + fetches * w_dma[t.name]
+            p = w_port[t.name]
+            port_time[p] = port_time.get(p, 0.0) \
+                + b * w_bytes[t.name] + fetches * w_dma[t.name]
+        # ports overlap: the ranking time is the busiest port's, matching
+        # Target.transfer_time's max-over-ports model
+        time_s = max(port_time.values(), default=0.0)
         return time_s, tot, dma, per, fetches_per
 
     # FLOPs at the *constraint* sizes, not group.total_flops(): under
@@ -385,6 +472,9 @@ def evaluate(
         lname = homes[n].name
         lvl_bytes[lname] = lvl_bytes.get(lname, 0) + b
         lvl_dma[lname] = lvl_dma.get(lname, 0) + fper[n]
+    for cc in comm_costs:
+        lvl_bytes[cc.level] = lvl_bytes.get(cc.level, 0) + cc.bytes
+        lvl_dma[cc.level] = lvl_dma.get(cc.level, 0) + cc.transfers
     tot = sum(lvl_bytes.values())
     dma = sum(lvl_dma.values())
 
@@ -410,6 +500,7 @@ def evaluate(
         tensor_depths=depths,
         op_compute=op_costs,
         per_engine_compute_s=per_engine,
+        collectives=comm_costs,
     )
 
 

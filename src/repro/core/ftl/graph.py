@@ -35,14 +35,21 @@ from typing import Sequence
 from . import fusion
 from .fusion import GEMM_POLICY, HEADDIM_WHOLE
 from .ir import (
+    CollectiveNode,
     Dim,
     FusionGroup,
     OpNode,
     Role,
     TensorSpec,
+    collective,
     elementwise,
     gemm,
 )
+
+__all__ = [
+    "CollectiveNode", "OpGraph", "attention_graph", "block_graph",
+    "collective", "gemm_act_graph", "gemm_chain_graph", "mlp_graph",
+]
 
 
 @dataclasses.dataclass(frozen=True)

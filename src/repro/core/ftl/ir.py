@@ -165,6 +165,84 @@ class OpNode:
         return n
 
 
+@dataclasses.dataclass(frozen=True)
+class CollectiveNode(OpNode):
+    """A mesh collective as a first-class op in the chain.
+
+    ``comm`` is one of ``'all_gather'`` / ``'reduce_scatter'`` /
+    ``'all_reduce'``; ``mesh_size`` the number of participating chips.
+    The node carries zero FLOPs (``flops_per_macs=0`` — the per-element
+    reduce adds are noise next to the link time) and its payload moves
+    over the target's *interconnect* level's DMA port, so the cost model
+    prices it on a port that overlaps the segment's memory traffic
+    instead of folding it into compute or HBM time.
+
+    Bytes on the wire follow the standard ring formulas over the tensor
+    the shards reassemble into (``(N-1)/N ×`` the full payload per
+    direction, doubled for all-reduce's reduce-scatter + all-gather
+    phases); :meth:`comm_bytes` / :meth:`comm_transfers` evaluate them
+    so `cost.evaluate` and the DES agree on the wire traffic."""
+
+    comm: str = "all_reduce"
+    mesh_size: int = 1
+
+    def __post_init__(self):
+        if self.comm not in ("all_gather", "reduce_scatter", "all_reduce"):
+            raise ValueError(
+                f"collective {self.name}: unknown comm {self.comm!r}")
+        if self.mesh_size < 1:
+            raise ValueError(
+                f"collective {self.name}: mesh_size must be >= 1, got "
+                f"{self.mesh_size}")
+
+    def _payload(self, sizes: Mapping[str, int]) -> int:
+        # all_gather reassembles its *output*; reduce_scatter and
+        # all_reduce reduce over their full-size *input*.
+        t = self.output if self.comm == "all_gather" else self.inputs[0]
+        return t.bytes_full(sizes)
+
+    def comm_bytes(self, sizes: Mapping[str, int]) -> int:
+        """Bytes each chip moves over the link (ring algorithm)."""
+        n = self.mesh_size
+        if n <= 1:
+            return 0
+        phases = 2 if self.comm == "all_reduce" else 1
+        return phases * self._payload(sizes) * (n - 1) // n
+
+    def comm_transfers(self, sizes: Mapping[str, int]) -> int:
+        """Link messages per chip: one per ring step (and phase)."""
+        n = self.mesh_size
+        if n <= 1:
+            return 0
+        phases = 2 if self.comm == "all_reduce" else 1
+        return phases * (n - 1)
+
+
+def collective(
+    name: str,
+    comm: str,
+    x: TensorSpec,
+    out: TensorSpec,
+    mesh_size: int,
+) -> CollectiveNode:
+    """Build a :class:`CollectiveNode` ``out = comm(x)`` (same dims —
+    the shard spec is carried by the *sizes* the capture shrank, so the
+    planner's tiling constraints bind through plain EQ links)."""
+    links = tuple(
+        DimLink(x.name, d, LinkKind.EQ, d) for d in x.dims
+    )
+    return CollectiveNode(
+        name=name,
+        kind="collective",
+        inputs=(x,),
+        output=out,
+        links=links,
+        flops_per_macs=0,
+        comm=comm,
+        mesh_size=mesh_size,
+    )
+
+
 @dataclasses.dataclass
 class FusionGroup:
     """A chain of ops being planned together (paper step 3 output).

@@ -613,6 +613,56 @@ def mlp_executor(
 
 
 # ---------------------------------------------------------------------------
+# planner-cache registry: one ledger over every memoized planning entry
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHES: dict[str, Callable] = {}
+
+
+def register_plan_cache(name: str, fn: Callable) -> Callable:
+    """Enroll an ``lru_cache``-wrapped planner in the plan-cache ledger.
+
+    Higher layers (``repro.models.model``, ``repro.tune``) self-register
+    at import, so :func:`plan_cache_stats` covers every *imported*
+    planner cache without this module depending on them.  Returns ``fn``
+    so the call composes as a decorator-style tail."""
+    _PLAN_CACHES[name] = fn
+    return fn
+
+
+def plan_cache_stats() -> dict[str, dict[str, int]]:
+    """Hit/miss/size counters for every registered planner cache —
+    surfaced by ``ServeEngine.plan_report()`` so a serving run can show
+    its plans came from cache, not replanning."""
+    return {
+        name: {
+            "hits": info.hits,
+            "misses": info.misses,
+            "size": info.currsize,
+            "maxsize": info.maxsize,
+        }
+        for name, fn in sorted(_PLAN_CACHES.items())
+        for info in (fn.cache_info(),)
+    }
+
+
+def clear_plan_caches() -> None:
+    """Drop every registered planner cache (tests; target registry
+    edits that would otherwise serve stale plans)."""
+    for fn in _PLAN_CACHES.values():
+        fn.cache_clear()
+
+
+for _fn in (_mlp_kernel_footprint_fits, _partial_mlp_footprint_fits,
+            _attention_kernel_footprint_fits, _scan_tile,
+            _plan_block_cached, _mlp_executor_cached):
+    register_plan_cache(f"registry.{_fn.__name__}", _fn)
+for _fn in (partition._plan_chain_cached, partition._plan_chain_top_k_cached):
+    register_plan_cache(f"partition.{_fn.__name__}", _fn)
+del _fn
+
+
+# ---------------------------------------------------------------------------
 # block execution: walk the plan, dispatch every segment
 # ---------------------------------------------------------------------------
 

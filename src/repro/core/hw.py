@@ -78,6 +78,15 @@ class MemoryLevel:
     tensors a longer prefetch runway at a footprint cost.  Presets
     declare backing depth 1 (no extra requirement), which makes the max
     degenerate to the fast depth — the pre-per-level behaviour.
+
+    ``dma_port`` names the physical DMA engine/link that moves this
+    level's traffic.  Levels sharing a port serialize against each
+    other; traffic on distinct ports overlaps (``Target.transfer_time``
+    is a max over ports).  Every on-package tier keeps the default
+    ``"dma"`` port — a single port in play degenerates the max to the
+    old Σ-over-levels model bit-exactly — while interconnect tiers
+    (``ici``, ``noc``) declare their own port, which is what lets a
+    collective stream overlap the same segment's HBM traffic.
     """
 
     name: str
@@ -85,6 +94,15 @@ class MemoryLevel:
     bw_bytes_per_s: float
     dma_setup_s: float = 0.0
     buffer_depth: int = 2
+    dma_port: str = "dma"
+
+    @property
+    def is_interconnect(self) -> bool:
+        """Interconnect-class tier (chip-to-chip link, not a memory): the
+        ``1 << 50`` capacity sentinel presets use for ici/noc levels.
+        Such a level prices collective traffic but is never a spill home
+        — remote HBM has no business backing a local streamed tensor."""
+        return self.capacity_bytes >= 1 << 48
 
     def __post_init__(self):
         if self.capacity_bytes <= 0:
@@ -173,6 +191,15 @@ class Target:
     def fast_capacity(self) -> int:
         """The tile budget (bytes) — what `vmem_budget` used to be."""
         return self.fast.capacity_bytes
+
+    @property
+    def interconnect(self) -> MemoryLevel | None:
+        """The chip-to-chip interconnect tier (ici/noc), if this target
+        has one — the level collective traffic is priced against."""
+        for lv in self.backing:
+            if lv.is_interconnect:
+                return lv
+        return None
 
     # ------------------------------------------------------------------
     def with_fast_capacity(self, capacity_bytes: int) -> "Target":
@@ -267,36 +294,81 @@ class Target:
         """Home backing level per tensor: smallest-first first-fit.
 
         Small tensors claim the shallow tiers; whatever no longer fits
-        spills deeper (the deepest level always accepts).  This is the
-        paper's L2-overflow mechanism: a big fused-away intermediate that
-        *would* have streamed now never competes for L2 at all, while the
-        unfused schedule's intermediate spills to L3.
+        spills deeper (the deepest *memory* level always accepts).  This
+        is the paper's L2-overflow mechanism: a big fused-away
+        intermediate that *would* have streamed now never competes for
+        L2 at all, while the unfused schedule's intermediate spills to
+        L3.
+
+        Interconnect-class levels (``MemoryLevel.is_interconnect``: the
+        ``1 << 50`` ici/noc sentinels) are excluded from both the
+        first-fit and the spill fallback — their "capacity" is remote
+        memory reachable over the link, not a home for a locally
+        streamed tensor, and their sentinel size would otherwise win
+        every overflow.  Spills land on the deepest memory tier (hbm on
+        ``tpu_v5e``, l3 on the rv32 presets) instead.
         """
-        free = {lv.name: lv.capacity_bytes for lv in self.backing}
+        memory = [lv for lv in self.backing if not lv.is_interconnect]
+        if not memory:                # all-interconnect hierarchy: degenerate
+            memory = list(self.backing)
+        free = {lv.name: lv.capacity_bytes for lv in memory}
         homes: dict[str, MemoryLevel] = {}
         for tname in sorted(footprints, key=lambda n: (footprints[n], n)):
             placed = None
-            for lv in self.backing[:-1]:
+            for lv in memory[:-1]:
                 if footprints[tname] <= free[lv.name]:
                     free[lv.name] -= footprints[tname]
                     placed = lv
                     break
-            homes[tname] = placed if placed is not None else self.backing[-1]
+            homes[tname] = placed if placed is not None else memory[-1]
         return homes
+
+    def transfer_time_by_port(
+        self,
+        bytes_by_level: Mapping[str, int],
+        transfers_by_level: Mapping[str, int],
+    ) -> dict[str, float]:
+        """Serialized DMA time per port:
+        ``Σ_{level on port} bytes/bw + transfers·dma_setup``."""
+        by_name = {lv.name: lv for lv in self.backing}
+        per_port: dict[str, float] = {}
+        for name, b in bytes_by_level.items():
+            lv = by_name[name]
+            per_port[lv.dma_port] = per_port.get(lv.dma_port, 0.0) \
+                + b / lv.bw_bytes_per_s
+        for name, n in transfers_by_level.items():
+            lv = by_name[name]
+            per_port[lv.dma_port] = per_port.get(lv.dma_port, 0.0) \
+                + n * lv.dma_setup_s
+        return per_port
 
     def transfer_time(
         self,
         bytes_by_level: Mapping[str, int],
         transfers_by_level: Mapping[str, int],
     ) -> float:
-        """Modeled DMA time: Σ_level bytes/bw + transfers·dma_setup."""
-        by_name = {lv.name: lv for lv in self.backing}
-        t = 0.0
-        for name, b in bytes_by_level.items():
-            t += b / by_name[name].bw_bytes_per_s
-        for name, n in transfers_by_level.items():
-            t += n * by_name[name].dma_setup_s
-        return t
+        """Modeled DMA time: levels sharing a ``dma_port`` serialize
+        (Σ bytes/bw + transfers·dma_setup within the port); distinct
+        ports overlap, so the total is the ``max`` over ports.  With a
+        single port in play this is bit-identical to the old
+        Σ-over-levels model; it diverges only when interconnect traffic
+        (collectives on ici/noc) runs alongside memory traffic."""
+        per_port = self.transfer_time_by_port(
+            bytes_by_level, transfers_by_level)
+        return max(per_port.values(), default=0.0)
+
+    def transfer_time_serialized(
+        self,
+        bytes_by_level: Mapping[str, int],
+        transfers_by_level: Mapping[str, int],
+    ) -> float:
+        """The pre-multi-port model — Σ over *all* levels regardless of
+        port, as if one DMA engine moved everything.  Kept as the
+        no-overlap baseline bench_mesh gates the simulated overlap
+        against."""
+        per_port = self.transfer_time_by_port(
+            bytes_by_level, transfers_by_level)
+        return sum(per_port.values())
 
     def compute_time_s(self, flops: float) -> float:
         """Modeled compute time of ``flops`` at this target's peak rate
@@ -467,7 +539,7 @@ TPU_V5E = Target(
         MemoryLevel("hbm", int(16e9), 819e9, dma_setup_s=1e-6,
                     buffer_depth=1),
         MemoryLevel("ici", 1 << 50, 50e9, dma_setup_s=5e-6,
-                    buffer_depth=1),
+                    buffer_depth=1, dma_port="ici"),
     ),
     flops=197e12,
 )
@@ -521,8 +593,28 @@ RV32_NPU = Target(
     ),
 )
 
+# Multi-cluster Siracusa-like SoC: several RV32+NPU clusters on one die
+# joined by an on-chip NoC (chip-to-chip extension of the same link class
+# for >1-die meshes).  The per-cluster hierarchy and engines are exactly
+# RV32_NPU — with no collectives in a graph the plans are identical —
+# but the NoC level (interconnect sentinel capacity, its own DMA port)
+# lets the planner price all-reduce/all-gather streams for a
+# tensor-parallel block and overlap them with the L2/L3 DMA traffic.
+# ~8 GB/s NoC with a per-message setup in the µs class (PULP cluster-
+# to-cluster DMA literature, order of magnitude).
+RV32_MESH = Target(
+    name="rv32_mesh",
+    levels=RV32_NPU.levels + (
+        MemoryLevel("noc", 1 << 50, 8e9, dma_setup_s=2e-6,
+                    buffer_depth=1, dma_port="noc"),
+    ),
+    flops=RV32_NPU.flops,
+    engines=RV32_NPU.engines,
+)
+
 PRESETS: dict[str, Target] = {
-    t.name: t for t in (TPU_V5E, CPU_CACHE, RV32_L1_L2, RV32_NPU)
+    t.name: t for t in (TPU_V5E, CPU_CACHE, RV32_L1_L2, RV32_NPU,
+                        RV32_MESH)
 }
 
 
@@ -576,7 +668,7 @@ def _tpu_target(device_kind: str) -> Target:
                     MemoryLevel("hbm", int(hbm_bytes), hbm_bw,
                                 dma_setup_s=1e-6, buffer_depth=1),
                     MemoryLevel("ici", 1 << 50, 50e9, dma_setup_s=5e-6,
-                                buffer_depth=1),
+                                buffer_depth=1, dma_port="ici"),
                 ),
                 flops=flops,
             )

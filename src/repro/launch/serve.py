@@ -240,6 +240,7 @@ class ServeEngine:
 
         pre = entry(self.block_plan, self.buckets[-1])
         dec = entry(self.decode_plan, 1)
+        from repro.core.ftl import registry as ftl_registry
         return {
             "target": self.target.name,
             "buckets": list(self.buckets),
@@ -247,6 +248,9 @@ class ServeEngine:
             "decode": dec,
             "decode_differs_from_prefill": bool(
                 pre and dec and pre["cuts"] != dec["cuts"]),
+            # every memoized planner the serving path leans on — shows
+            # the plans above came out of cache, not replanning
+            "plan_caches": ftl_registry.plan_cache_stats(),
         }
 
     def warmup_compile(self, extras: dict[str, Any] | None = None) -> None:
@@ -604,6 +608,11 @@ def main() -> None:
               f"cuts={e['cuts']} executors={e['executors']}")
     if report["decode_differs_from_prefill"]:
         print("  decode cuts differ from prefill (memory-bound m=1 DP)")
+    hot = {n: s for n, s in report["plan_caches"].items()
+           if s["hits"] or s["misses"]}
+    for n, s in hot.items():
+        print(f"  plan cache {n}: {s['hits']} hits / {s['misses']} misses "
+              f"({s['size']}/{s['maxsize']} entries)")
     if eng.block_plan is not None:
         exec_stats = eng.execute_block_plan()
         if exec_stats is not None:

@@ -281,6 +281,12 @@ def _serve_plan_cached(cfg, m: int, dtype: str, target, phase: str):
         return None
 
 
+ftl_registry.register_plan_cache("model._block_plan_cached",
+                                 _block_plan_cached)
+ftl_registry.register_plan_cache("model._serve_plan_cached",
+                                 _serve_plan_cached)
+
+
 def serve_plan(cfg, *, m: int, dtype: str | None = None, target=None,
                phase: str = "prefill",
                buckets: tuple[int, ...] = PREFILL_BUCKETS):

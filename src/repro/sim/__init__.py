@@ -12,13 +12,16 @@ an explicit per-tile-step event timeline and replaying it:
   :class:`~repro.core.ftl.registry.BlockPlan` into a :class:`Schedule`:
   one ``DmaIn`` per tensor re-fetch (the cost model's revisit rule,
   event by event), a per-engine ``Compute`` chain per tile step, one
-  ``DmaOut`` per completed output block — buffer slots from the fast
-  level's ``buffer_depth``, tensor homes from ``cost.evaluate``'s
-  per-level assignment, engines from the op-kind → ``hw.Engine`` map.
+  ``DmaOut`` per completed output block, and per-step ``Comm`` chunks
+  for a segment's collectives — buffer slots from the fast level's
+  ``buffer_depth``, tensor homes from ``cost.evaluate``'s per-level
+  assignment, engines from the op-kind → ``hw.Engine`` map.
 * :mod:`repro.sim.des` replays a schedule respecting buffer-slot
-  hazards, DMA serialization at the fast-level port, and per-engine
-  concurrency, reporting simulated runtime, per-resource busy/stall
-  time and overlap efficiency.
+  hazards, DMA serialization per *port* (all memory tiers share the
+  default port — the single fast-level DMA — while collective traffic
+  runs on the interconnect's own port and genuinely overlaps), and
+  per-engine concurrency, reporting simulated runtime, per-resource
+  busy/stall time and overlap efficiency.
 * :mod:`repro.sim.report` compares simulated against analytic runtime
   and renders event timelines (``benchmarks/bench_schedule.py`` turns
   the comparison into a CI gate).
@@ -30,7 +33,7 @@ fill/drain to amortize — ``tests/test_sim.py`` pins both directions.
 """
 from repro.core.hw import Engine  # noqa: F401  (re-export: sim's engine model)
 
-from .des import ChainSimResult, SimResult, simulate, simulate_chain
+from .des import ChainSimResult, SimResult, port_key, simulate, simulate_chain
 from .engine import step_compute_chain
 from .report import (
     chain_timeline,
@@ -41,6 +44,7 @@ from .report import (
     write_chrome_trace,
 )
 from .schedule import (
+    Comm,
     Compute,
     DmaIn,
     DmaOut,
@@ -52,7 +56,7 @@ from .schedule import (
 
 __all__ = [
     "Engine",
-    "Schedule", "DmaIn", "Compute", "DmaOut",
+    "Schedule", "DmaIn", "Compute", "DmaOut", "Comm", "port_key",
     "lower_plan", "lower_chain", "lower_block",
     "SimResult", "ChainSimResult", "simulate", "simulate_chain",
     "step_compute_chain",

@@ -2,12 +2,17 @@
 
 Resources and hazards:
 
-* **One DMA port** at the fast level: every ``DmaIn``/``DmaOut``
-  serializes through it in program order, each transfer priced at its
-  home backing level (``bytes/bw + dma_setup``).  This matches the
-  analytic transfer model — ``Σ_level bytes/bw + transfers·setup`` is a
-  *sum*, i.e. one engine moving everything — and Siracusa's single
-  cluster DMA.  Per-level busy time is still reported separately.
+* **One unit per DMA port** (``MemoryLevel.dma_port``): every
+  ``DmaIn``/``DmaOut``/``Comm`` serializes in program order against the
+  other transfers on *its level's* port, each priced at that level
+  (``bytes/bw + dma_setup``).  All memory tiers share the default
+  ``"dma"`` port (Siracusa's single cluster DMA — with one port in
+  play this is exactly the old single-cursor replay), while the
+  interconnect (ici/noc) runs on its own port, so a collective stream
+  overlaps the same segment's memory DMA instead of queueing behind it
+  — the max-over-ports analytic model, replayed rather than asserted.
+  Busy time is reported as ``'dma'`` for the default port and
+  ``'dma:<port>'`` for others; per-level busy time stays separate.
 * **One unit per engine**: compute events on the same engine serialize
   (in order); distinct engines overlap.  Within a step the compute
   chain respects op order (the cluster's GeLU waits for the NPU's GEMM
@@ -35,7 +40,14 @@ from __future__ import annotations
 
 import dataclasses
 
-from .schedule import Compute, DmaIn, Schedule
+from .schedule import Comm, Compute, DmaIn, Schedule
+
+
+def port_key(port: str) -> str:
+    """Busy-dict key of a DMA port: the default port keeps the legacy
+    ``'dma'`` key (every existing report/gate reads it); other ports
+    (ici/noc) get ``'dma:<port>'``."""
+    return "dma" if port == "dma" else f"dma:{port}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +55,7 @@ class SimResult:
     """Replay outcome of one schedule (one run of one segment)."""
 
     runtime_s: float
-    busy_s: dict[str, float]          # 'dma' + 'engine:<name>' → busy time
+    busy_s: dict[str, float]   # 'dma[:<port>]' + 'engine:<name>' → busy
     per_level_busy_s: dict[str, float]
     analytic_runtime_s: float
     n_events: int
@@ -109,11 +121,16 @@ def simulate(
     schedule: Schedule,
     *,
     buffer_depth: int | None = None,
+    share_ports: bool = False,
     trace: bool = False,
 ) -> SimResult:
     """Replay ``schedule``; ``buffer_depth`` overrides the lowered depth
     (same logical schedule, different slot hazards and prefetch
-    distance — the depth-sweep hook).
+    distance — the depth-sweep hook).  ``share_ports`` replays the same
+    events with every transfer serialized on the single default DMA
+    cursor — the pre-multi-port model, the counterfactual baseline the
+    mesh bench gates overlap wins against (merging cursors only adds
+    constraints, so the shared-port replay is always ≥ the split one).
 
     The schedule's events are in *logical* step order (loads, computes,
     store-backs of step ``s`` together); the DES derives the DMA issue
@@ -141,13 +158,17 @@ def simulate(
 
     comp_by: dict[int, list[Compute]] = {}
     outs_by: dict[int, list] = {}
+    pcomm_by: dict[int, list[Comm]] = {}
     for ev in schedule.events:
         if isinstance(ev, Compute):
             comp_by.setdefault(ev.step, []).append(ev)
+        elif isinstance(ev, Comm):
+            if not ev.pre:
+                pcomm_by.setdefault(ev.step, []).append(ev)
         elif not isinstance(ev, DmaIn):
             outs_by.setdefault(ev.step, []).append(ev)
 
-    dma_free = 0.0                      # the fast-level DMA port
+    port_free: dict[str, float] = {}    # one cursor per DMA port
     engine_free: dict[str, float] = {}
     busy: dict[str, float] = {"dma": 0.0}
     level_busy: dict[str, float] = {}
@@ -166,35 +187,43 @@ def simulate(
         if trace:
             timeline.append((ev, start, finish))
 
-    def _dma(ev) -> float:
+    def _dma(ev) -> tuple[str, float]:
         lv = levels[ev.level]
-        dur = ev.bytes / lv.bw_bytes_per_s + lv.dma_setup_s
-        busy["dma"] += dur
+        if isinstance(ev, Comm):
+            dur = ev.bytes / lv.bw_bytes_per_s + ev.setups * lv.dma_setup_s
+        else:
+            dur = ev.bytes / lv.bw_bytes_per_s + lv.dma_setup_s
+        port = "dma" if share_ports else lv.dma_port
+        key = port_key(port)
+        busy[key] = busy.get(key, 0.0) + dur
         level_busy[ev.level] = level_busy.get(ev.level, 0.0) + dur
-        return dur
+        return port, dur
 
-    def _issue_in(ev: DmaIn) -> None:
-        nonlocal dma_free
-        us = use_steps.setdefault(ev.tensor, [])
-        us.append(ev.step)
-        dur = _dma(ev)
-        start = dma_free
-        dt = _depth(ev.tensor)
-        if ev.fetch >= dt:
-            # slot hazard: this fetch overwrites the buffer that held
-            # fetch f−depth, last consumed by the step before fetch
-            # f−depth+1 arrived — whose chain is already scheduled
-            # (fetch f is issued depth−1 steps ahead of its use at most).
-            lu = us[ev.fetch - dt + 1] - 1
-            if lu >= 0:
-                start = max(start, chain_finish[lu])
+    def _issue_in(ev) -> None:
+        port, dur = _dma(ev)
+        start = port_free.get(port, 0.0)
+        if isinstance(ev, DmaIn):
+            us = use_steps.setdefault(ev.tensor, [])
+            us.append(ev.step)
+            dt = _depth(ev.tensor)
+            if ev.fetch >= dt:
+                # slot hazard: this fetch overwrites the buffer that held
+                # fetch f−depth, last consumed by the step before fetch
+                # f−depth+1 arrived — whose chain is already scheduled
+                # (fetch f is issued depth−1 steps ahead of its use at
+                # most).
+                lu = us[ev.fetch - dt + 1] - 1
+                if lu >= 0:
+                    start = max(start, chain_finish[lu])
+        # pre-Comm chunks have no buffer slot: the link stream lands in
+        # the operand's staging buffers like any other prefetch
         finish = start + dur
-        dma_free = finish
+        port_free[port] = finish
         ready_q.append((ev.step, finish))
         _note(ev, start, finish)
 
     def _run_step(e: int) -> None:
-        nonlocal dma_free, ready_head
+        nonlocal ready_head
         # chain head: every streamed tile this step consumes is resident
         gate = 0.0
         while ready_head < len(ready_q) and ready_q[ready_head][0] <= e:
@@ -206,6 +235,20 @@ def simulate(
             if n >= dt:
                 gate = max(gate, out_finish[t][n - dt])
         prev = gate
+        comms = pcomm_by.get(e, [])
+        ci = 0
+
+        def _comm(c: Comm, at: float) -> float:
+            # post-collective chunk: the reduce of this tile's partial
+            # drains on the interconnect port, starting once its
+            # producer's compute is done
+            port, dur = _dma(c)
+            start = max(port_free.get(port, 0.0), at)
+            finish = start + dur
+            port_free[port] = finish
+            _note(c, start, finish)
+            return finish
+
         for ev in comp_by.get(e, ()):
             eng = f"engine:{ev.engine}"
             start = max(engine_free.get(eng, 0.0), prev)
@@ -214,12 +257,25 @@ def simulate(
             busy[eng] = busy.get(eng, 0.0) + ev.seconds
             prev = finish
             _note(ev, start, finish)
+            while ci < len(comms) and comms[ci].after_op in ev.ops:
+                f = _comm(comms[ci], prev)
+                if comms[ci].blocking:
+                    # the reduced value feeds a later op in this chain:
+                    # fusing across the collective serializes compute
+                    # behind the wire for this tile (the pipeline hides
+                    # it across steps, not within one)
+                    prev = f
+                ci += 1
+        for c in comms[ci:]:
+            # producer not in this step's chain (tail collective): the
+            # chunk gates segment completion only, like a write-back
+            _comm(c, prev)
         chain_finish[e] = prev
         for ev in outs_by.get(e, ()):
-            dur = _dma(ev)
-            start = max(dma_free, prev)
+            port, dur = _dma(ev)
+            start = max(port_free.get(port, 0.0), prev)
             finish = start + dur
-            dma_free = finish
+            port_free[port] = finish
             out_finish.setdefault(ev.tensor, []).append(finish)
             out_emitted[ev.tensor] = out_emitted.get(ev.tensor, 0) + 1
             _note(ev, start, finish)
@@ -229,10 +285,15 @@ def simulate(
     # the consuming step — load/compute serialize).  With uniform depths
     # this is exactly the classic prologue + steady-state issue loop;
     # per-tensor depths interleave deeper tensors' prefetches earlier.
-    issue_at: dict[int, list[DmaIn]] = {}
+    issue_at: dict[int, list] = {}
     for ev in schedule.events:
         if isinstance(ev, DmaIn):
             u = max(0, ev.step - (_depth(ev.tensor) - 1))
+            issue_at.setdefault(u, []).append(ev)
+        elif isinstance(ev, Comm) and ev.pre:
+            # an inbound collective chunk prefetches like a streamed
+            # tile, at the fast level's pipeline distance
+            u = max(0, ev.step - (depth - 1))
             issue_at.setdefault(u, []).append(ev)
     for e in range(steps):
         for ev in issue_at.get(e, ()):
@@ -253,11 +314,13 @@ def simulate_chain(
     schedules: tuple[tuple[Schedule, int], ...],
     *,
     buffer_depth: int | None = None,
+    share_ports: bool = False,
 ) -> ChainSimResult:
     """Replay a lowered chain (``repro.sim.schedule.lower_chain`` output):
     segments run sequentially, each simulated once and scaled by its
     multiplicity — mirroring the analytic Σ-over-segments model."""
     return ChainSimResult(segments=tuple(
-        (simulate(s, buffer_depth=buffer_depth), rep)
+        (simulate(s, buffer_depth=buffer_depth, share_ports=share_ports),
+         rep)
         for s, rep in schedules
     ))

@@ -9,8 +9,8 @@ from __future__ import annotations
 
 from typing import Sequence
 
-from .des import ChainSimResult, simulate, simulate_chain
-from .schedule import Compute, DmaIn, Schedule, lower_chain
+from .des import ChainSimResult, port_key, simulate, simulate_chain
+from .schedule import Comm, Compute, DmaIn, Schedule, lower_chain
 
 
 def compare_plan(chain) -> dict:
@@ -83,6 +83,10 @@ def timeline(schedule: Schedule, *, max_steps: int = 4) -> str:
                     f"({ev.bytes} B, fetch {ev.fetch}, slot {ev.slot})")
         elif isinstance(ev, Compute):
             desc = f"Compute [{ev.engine}] {'+'.join(ev.ops)}"
+        elif isinstance(ev, Comm):
+            arrow = "<-" if ev.pre else "->"
+            desc = (f"Comm    {ev.op} {arrow} {ev.level} "
+                    f"({ev.comm}, {ev.bytes} B)")
         else:
             desc = (f"DmaOut  {ev.tensor} -> {ev.level} "
                     f"({ev.bytes} B, block {ev.block}, slot {ev.slot})")
@@ -106,7 +110,8 @@ def to_chrome_trace(chain) -> dict:
     and export the event timeline as Chrome-tracing JSON — loadable in
     Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
 
-    One track (tid) per resource: ``dma`` plus one per engine.  Segments
+    One track (tid) per resource: ``dma`` (plus ``dma:<port>`` for
+    interconnect-port collective streams) and one per engine.  Segments
     are laid out sequentially (each repeated segment is traced once; its
     remaining repeats are summarized by a counter in the event args).
     Timestamps/durations are microseconds, the format's native unit.
@@ -126,6 +131,7 @@ def to_chrome_trace(chain) -> dict:
     t0 = 0.0
     for sched, rep in lowered:
         res = simulate(sched, trace=True)
+        ports = {lv.name: lv.dma_port for lv in sched.target.backing}
         for ev, start, finish in res.trace:
             if isinstance(ev, DmaIn):
                 track, nm = "dma", f"in:{ev.tensor}"
@@ -135,6 +141,11 @@ def to_chrome_trace(chain) -> dict:
             elif isinstance(ev, Compute):
                 track, nm = f"engine:{ev.engine}", "+".join(ev.ops)
                 args = {"step": ev.step}
+            elif isinstance(ev, Comm):
+                track = port_key(ports[ev.level])
+                nm = f"{ev.comm}:{ev.op}"
+                args = {"step": ev.step, "bytes": ev.bytes,
+                        "level": ev.level, "pre": ev.pre}
             else:
                 track, nm = "dma", f"out:{ev.tensor}"
                 args = {"step": ev.step, "bytes": ev.bytes,

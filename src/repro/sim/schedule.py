@@ -19,6 +19,11 @@ every data movement and compute becomes one event:
 * :class:`DmaOut` — a completed output block written back to its home
   level (outputs accumulate in fast memory and are written once per
   block, at the last step that touches the block).
+* :class:`Comm` — one step's chunk of a collective's wire traffic
+  (``CostReport.collectives``), spread evenly over the steps and
+  replayed on the interconnect level's *own* DMA port, so ici/noc
+  streams overlap the hbm/L2 traffic in the replay exactly as the
+  max-over-ports analytic model prices them.
 
 Buffer slots come from each tensor's *staging depth* —
 ``max(fast.buffer_depth, home.buffer_depth)``, the backing-level-aware
@@ -85,7 +90,36 @@ class DmaOut:
     slot: int             # block % the tensor's staging depth
 
 
-Event = Union[DmaIn, Compute, DmaOut]
+@dataclasses.dataclass(frozen=True)
+class Comm:
+    """Tile step ``step``'s chunk of a collective's wire traffic.
+
+    A segment's collectives (``CostReport.collectives``) move a fixed
+    payload per segment run; the lowering spreads it evenly over the
+    grid's tile steps (exact integer split — chunks sum to the analytic
+    bytes/transfer totals) so the DES can interleave the link stream
+    with the per-step memory DMA on its *own* port.  ``pre`` chunks feed
+    step ``step``'s compute like a prefetch (the operand streamed in);
+    post chunks start behind the in-segment compute that produced the
+    operand (``after_op``), and when the reduced output is consumed
+    later in the same segment (``blocking``) the rest of that step's
+    chain waits for the wire — fusing across a collective costs real
+    serialization per tile, hidden only by the cross-step pipeline.
+    ``setups`` is this chunk's share of the ring messages (most chunks
+    carry 0 — there are far fewer ring steps than tiles)."""
+
+    step: int
+    op: str               # CollectiveNode name (e.g. 'comm.proj.wo')
+    comm: str             # all_gather | reduce_scatter | all_reduce
+    level: str            # interconnect level (ici / noc)
+    bytes: int
+    setups: int
+    pre: bool
+    after_op: str = ""    # in-segment producer op ("" when streamed)
+    blocking: bool = False  # output consumed later in the segment
+
+
+Event = Union[DmaIn, Compute, DmaOut, Comm]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,10 +142,14 @@ class Schedule:
     tensor_depths: dict[str, int] = dataclasses.field(default_factory=dict)
 
     def dma_events(self) -> list[Union[DmaIn, DmaOut]]:
-        return [e for e in self.events if not isinstance(e, Compute)]
+        return [e for e in self.events
+                if not isinstance(e, (Compute, Comm))]
 
     def compute_events(self) -> list[Compute]:
         return [e for e in self.events if isinstance(e, Compute)]
+
+    def comm_events(self) -> list[Comm]:
+        return [e for e in self.events if isinstance(e, Comm)]
 
 
 def _unflatten(s: int, counts: list[int]) -> tuple[int, ...]:
@@ -215,12 +253,29 @@ def lower_plan(plan: TilePlan, name: str | None = None) -> Schedule:
             out.append((engine, secs, tuple(oc.name for oc in ocs)))
         return tuple(out)
 
+    # Collective wire chunks: each CollectiveCost's payload split evenly
+    # over the tile steps (exact integer split), interleaved with the
+    # step's memory DMA so the DES can overlap the two ports.
+    def _chunks(total: int) -> list[int]:
+        base, rem = divmod(total, steps)
+        return [base + (1 if s < rem else 0) for s in range(steps)]
+
+    comm_chunks = [
+        (cc, _chunks(cc.bytes), _chunks(cc.transfers))
+        for cc in rep.collectives
+    ]
+
     events: list[Event] = []
     prev_key: dict[str, tuple[int, ...]] = {}
     fetch_n = {t.name: 0 for t in ins}
     block_n = {t.name: 0 for t in outs}
     for s in range(steps):
         coords = _unflatten(s, counts)
+        for cc, bts, sps in comm_chunks:
+            if cc.pre and (bts[s] or sps[s]):
+                events.append(Comm(
+                    step=s, op=cc.name, comm=cc.comm, level=cc.level,
+                    bytes=bts[s], setups=sps[s], pre=True))
         for t in ins:
             key = coords[: in_prefix[t.name]]
             if prev_key.get(t.name) != key:
@@ -243,6 +298,12 @@ def lower_plan(plan: TilePlan, name: str | None = None) -> Schedule:
                     step=s, tensor=t.name, level=homes[t.name],
                     bytes=_tile_bytes(t, coords), block=b,
                     slot=b % tdepth[t.name]))
+        for cc, bts, sps in comm_chunks:
+            if not cc.pre and (bts[s] or sps[s]):
+                events.append(Comm(
+                    step=s, op=cc.name, comm=cc.comm, level=cc.level,
+                    bytes=bts[s], setups=sps[s], pre=False,
+                    after_op=cc.producer, blocking=cc.blocking))
 
     return Schedule(
         name=name or group.name,

@@ -42,6 +42,7 @@ from typing import Mapping
 from repro.core import hw as hwlib
 from repro.core.ftl import cost as costlib
 from repro.core.ftl import partition as partlib
+from repro.core.ftl import registry
 from repro.core.ftl import solver as solverlib
 from repro.core.ftl.constraints import DimConstraint
 from repro.core.ftl.graph import OpGraph
@@ -389,6 +390,9 @@ def _autotune_cached(graph: OpGraph, target: hwlib.Target,
                      config: AutotuneConfig,
                      sharded: tuple | None) -> TuneResult:
     return _Search(graph, target, config, sharded).run()
+
+
+registry.register_plan_cache("tune._autotune_cached", _autotune_cached)
 
 
 def autotune_chain(

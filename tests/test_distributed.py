@@ -167,3 +167,37 @@ logits, cache = step(params, cache, jnp.ones((4, 1), jnp.int32),
 assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
 print('OK decode on mesh')
 """))
+
+
+@pytest.mark.slow
+def test_act_sharding_parity_two_device_mesh():
+    """Sharded forward (activation policy + param shardings on a 1x2
+    mesh) must match the unsharded single-device forward bit-for-bit up
+    to float tolerance — the policy only annotates placement."""
+    pytest.importorskip("jax")
+    check(run_with_devices("""
+import jax, numpy as np
+from repro import configs
+from repro.launch.mesh import make_mesh
+from repro.models import model as M
+from repro.distributed import act_sharding
+from repro.distributed.sharding import make_activation_policy, \
+    param_shardings
+
+cfg = configs.get_config('llama3.2-3b').reduced()
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+batch = {'tokens': jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                      cfg.vocab_size)}
+ref, _ = jax.jit(lambda p, b: M.forward(cfg, p, b))(params, batch)
+
+mesh = make_mesh((1, 2), ('data', 'model'))
+placed = jax.device_put(params,
+                        param_shardings(jax.eval_shape(lambda: params),
+                                        mesh, cfg))
+with act_sharding.use_policy(make_activation_policy(mesh, cfg)):
+    out, _ = jax.jit(lambda p, b: M.forward(cfg, p, b))(placed, batch)
+np.testing.assert_allclose(np.asarray(ref, dtype=np.float32),
+                           np.asarray(out, dtype=np.float32),
+                           rtol=2e-3, atol=2e-5)
+print('OK act-sharding parity')
+""", n_devices=2))
