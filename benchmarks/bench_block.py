@@ -86,8 +86,19 @@ def _layer_params(cfg, key):
     }
 
 
-def _best_ms(fn, x, iters):
+WARMUP = 1
+
+
+def _best_ms(fn, x, iters, warmup=None):
+    """min wall-clock ms over ``iters`` timed runs.  One untimed call
+    compiles; ``warmup`` further *timed-path* iterations follow before
+    the measured loop, so plan-cache lookups / dispatch setup that only
+    the first post-compile call pays never land in a sample (the
+    calibration loop consumes these numbers as ground truth)."""
+    warmup = WARMUP if warmup is None else warmup
     fn(x).block_until_ready()  # compile
+    for _ in range(warmup):
+        fn(x).block_until_ready()
     best = float("inf")
     for _ in range(iters):
         t0 = time.perf_counter()
@@ -132,6 +143,8 @@ def exec_rows() -> list[dict]:
                 "ref_ms": ms_ref,
                 "plan_ms": ms_plan,
                 "speedup": round(ms_ref / ms_plan, 3) if ms_plan else "-",
+                "n_repeats": _iters(),
+                "warmup": WARMUP,
             }
             rows.append(row)
     return rows

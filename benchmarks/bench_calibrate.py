@@ -1,0 +1,147 @@
+"""Measured-calibration benchmark: fit Target constants from this host's
+wall-clock runs and gate modeled-vs-measured drift (the calibration
+tentpole's CI artifact).
+
+Sweeps the isolated microbenchmarks (GEMM / elementwise / DMA-proxy at
+several shapes, ``repro.calib.microbench_sweep``) plus a
+``bench_block``-style whole-block ref-vs-plan measurement, fits
+effective per-level bandwidth / DMA setup and per-engine FLOP/s by NNLS
+over the shared roofline model (``repro.calib.calibrate``), and writes
+``BENCH_calibrate.json``: the fitted constants, per-measurement
+residuals (base and calibrated side by side), and the drift-gate
+verdict.  It also writes ``BENCH_calibrate_trace.json`` — the planned
+block replayed through the DES with the measured span overlaid as a
+second track (open at https://ui.perfetto.dev to eyeball the residual).
+
+**CI gates** (or the run fails):
+
+* *drift*: on the calibrated target the geometric-mean modeled/measured
+  ratio over every measurement sits inside the band — the model tracks
+  this host, it doesn't just rank plans;
+* *tighter-than-base*: the calibrated target's mean |log residual| is
+  strictly below the uncalibrated preset's — calibration must *improve*
+  the fit, never ride on a lucky preset.
+"""
+from __future__ import annotations
+
+import json
+
+from repro import calib, sim
+from repro.core import hw
+
+from ._smoke import smoke
+
+OUT = "BENCH_calibrate.json"
+TRACE_OUT = "BENCH_calibrate_trace.json"
+
+ARCH = "llama3.2-3b"
+
+# the drift band: effective constants fitted on the same host should
+# model it well within ~3x either way even on noisy shared CI runners;
+# a model off by more than that is mispricing plans outright.
+BAND = (0.3, 10 / 3)
+
+
+def _params():
+    if smoke():
+        return {
+            "gemm_shapes": ((256, 256, 256), (512, 512, 512)),
+            "elementwise_sizes": (1 << 20, 1 << 22),
+            "dma_sizes": (1 << 21, 1 << 23, 1 << 25),
+            "block_m": 64,
+            "repeats": 3,
+        }
+    return {
+        "gemm_shapes": ((256, 256, 256), (512, 512, 512),
+                        (1024, 512, 1024), (2048, 1024, 2048)),
+        "elementwise_sizes": (1 << 20, 1 << 22, 1 << 23, 1 << 24),
+        "dma_sizes": (1 << 21, 1 << 23, 1 << 25, 1 << 26, 1 << 27),
+        "block_m": 128,
+        "repeats": 7,
+    }
+
+
+def _residual_row(r: calib.Residual) -> dict:
+    return {
+        "name": r.name,
+        "kind": r.kind,
+        "in_fit": r.in_fit,
+        "measured_ms": round(1e3 * r.measured_s, 4),
+        "base_modeled_ms": round(1e3 * r.base_modeled_s, 4),
+        "calibrated_modeled_ms": round(1e3 * r.calibrated_modeled_s, 4),
+        "base_ratio": round(r.base_ratio, 4),
+        "calibrated_ratio": round(r.calibrated_ratio, 4),
+    }
+
+
+def run(base: hw.Target | None = None) -> dict:
+    base = base if base is not None else hw.default_target()
+    p = _params()
+
+    print(f"# calibrating against {base.name} "
+          f"({'smoke' if smoke() else 'full'} sweep)")
+    ms = calib.microbench_sweep(
+        base=base,
+        gemm_shapes=p["gemm_shapes"],
+        elementwise_sizes=p["elementwise_sizes"],
+        dma_sizes=p["dma_sizes"],
+        repeats=p["repeats"],
+    )
+    ms += calib.measure_block(ARCH, p["block_m"], base=base,
+                              repeats=p["repeats"])
+
+    result = calib.calibrate(ms, base=base)
+    gate = calib.drift_gate(result, band=BAND)
+    print(result.summary())
+
+    # Perfetto residual view: the planned block's simulated timeline with
+    # its measured wall-clock span as a second track
+    from repro.core.ftl import registry
+    import dataclasses as _dc
+
+    from repro import configs
+    cfg = configs.get_config(ARCH).reduced()
+    cfg = _dc.replace(cfg, dtype="float32", remat=False, ftl_mode="auto")
+    plan = registry.plan_block(cfg, m=p["block_m"], dtype="float32",
+                               target=base)
+    block_ms = [m for m in ms if m.kind == "block"]
+    sim.write_chrome_trace(plan, TRACE_OUT, measured=block_ms)
+    print(f"# wrote {TRACE_OUT} (measured-vs-simulated residual view)")
+
+    return {
+        "base_target": base.name,
+        "calibrated_target": result.target.name,
+        "calibrated_describe": result.target.describe(),
+        "n_iter": result.n_iter,
+        "fitted": dict(result.fitted),
+        "inherited": list(result.inherited),
+        "residuals": [_residual_row(r) for r in result.residuals],
+        "gate": gate,
+        "params": {k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in p.items()},
+    }
+
+
+def main() -> None:
+    row = run()
+    with open(OUT, "w") as f:
+        json.dump({"smoke": smoke(), **row}, f, indent=2)
+    print(f"# wrote {OUT}")
+
+    g = row["gate"]
+    if not g["in_band"]:
+        raise SystemExit(
+            f"CALIBRATION DRIFT GATE FAILED: geomean modeled/measured "
+            f"{g['geomean_ratio']:.3f} outside band {g['band']}")
+    if not g["residual_tighter_than_base"]:
+        raise SystemExit(
+            f"CALIBRATION GATE FAILED: calibrated residual "
+            f"{g['mean_abs_log_residual']:.3f} not tighter than "
+            f"uncalibrated base {g['base_mean_abs_log_residual']:.3f}")
+    print(f"# gates OK: geomean ratio {g['geomean_ratio']:.3f} in "
+          f"{g['band']}, residual {g['mean_abs_log_residual']:.3f} < "
+          f"base {g['base_mean_abs_log_residual']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

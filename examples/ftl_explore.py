@@ -69,6 +69,11 @@ def main() -> None:
                     help="plan a tensor-parallel block (--arch) at mesh "
                          "sizes 1..N with collectives as first-class ops; "
                          "the mesh-N plan feeds --timeline/--trace")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit effective Target constants from this "
+                         "host's wall-clock microbenchmarks "
+                         "(repro.calib) and explore on the calibrated "
+                         "machine instead of the preset")
     args = ap.parse_args()
 
     g = graph.mlp_graph(m=args.m, d_model=args.d, d_ff=args.f,
@@ -95,6 +100,15 @@ def main() -> None:
 
     # --- capacity sweep on one target ------------------------------------
     base = hw.get_target(args.target)
+    if args.calibrate:
+        from repro import calib
+        print(f"\ncalibrating {base.name} from this host's wall-clock "
+              f"microbenchmarks...")
+        result = calib.calibrate(calib.microbench_sweep(base=base),
+                                 base=base)
+        print(result.summary())
+        base = result.target
+        print(f"exploring on the calibrated machine: {base.describe()}")
     print(f"\nfast-level capacity sweep on {args.target}:")
     print(f"{'budget':>10} {'decision':>9} {'fused MiB':>10} "
           f"{'unfused MiB':>12} {'reduction':>10}")

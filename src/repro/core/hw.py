@@ -471,6 +471,24 @@ class Target:
         return max(self.engine_times(flops_by_kind).values(), default=0.0)
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def calibrated(measurements, base: "Target | None" = None) -> "Target":
+        """A preset-shaped target with constants *fitted from measured
+        wall-clock runs* (``repro.calib``): same level names, capacities,
+        ports and engine structure as ``base`` (default: the process
+        default target), but effective per-level bandwidth / DMA setup
+        and per-engine FLOP/s solved by non-negative least squares over
+        the shared roofline model.  ``measurements`` is a sequence of
+        :class:`repro.calib.Measurement` (see
+        ``repro.calib.microbench_sweep``).  For the fit diagnostics —
+        per-measurement residuals, the drift-gate statistics — call
+        :func:`repro.calib.calibrate` directly; this returns only the
+        target."""
+        from repro.calib import calibrate
+
+        return calibrate(measurements, base=base).target
+
+    # ------------------------------------------------------------------
     def describe(self) -> str:
         parts = [
             f"{lv.name} {_fmt_bytes(lv.capacity_bytes)}"
@@ -707,7 +725,12 @@ def detect_target(devices: Sequence | None = None) -> Target:
 # ---------------------------------------------------------------------------
 
 _DEFAULT: list[Target | None] = [None]
-_DETECTED: list[Target | None] = [None]     # detect_target() memo
+# Resolution memo, keyed by the FTL_TARGET env value in effect when the
+# resolution was made (None = device detection).  Keying on the env state
+# is what makes flipping FTL_TARGET mid-process take effect immediately
+# instead of being shadowed by a first-answer memo; set_default_target
+# clears it outright so an override can never be answered stale either.
+_RESOLVED: dict[str | None, Target] = {}
 
 
 def default_target() -> Target:
@@ -715,21 +738,26 @@ def default_target() -> Target:
 
     Order: :func:`set_default_target` override, then the ``FTL_TARGET``
     env var (a preset name), then :func:`detect_target` on the process's
-    JAX device list (memoized — the device list cannot change
-    in-process).
+    JAX device list.  The resolution is memoized *per env state*
+    (``_RESOLVED``), so detection runs once per process but a changed
+    ``FTL_TARGET`` or :func:`set_default_target` call is honored on the
+    very next lookup — never silently ignored.
     """
     if _DEFAULT[0] is not None:
         return _DEFAULT[0]
-    env = os.environ.get("FTL_TARGET")
-    if env:
-        return get_target(env)
-    if _DETECTED[0] is None:
-        _DETECTED[0] = detect_target()
-    return _DETECTED[0]
+    env = os.environ.get("FTL_TARGET") or None
+    got = _RESOLVED.get(env)
+    if got is None:
+        got = get_target(env) if env else detect_target()
+        _RESOLVED[env] = got
+    return got
 
 
 def set_default_target(target: Target | str | None) -> None:
-    """Set (or with ``None`` clear) the process-wide default target."""
+    """Set (or with ``None`` clear) the process-wide default target.
+    Clears the resolution memo so later lookups re-resolve against the
+    current override/env state."""
     if isinstance(target, str):
         target = get_target(target)
     _DEFAULT[0] = target
+    _RESOLVED.clear()

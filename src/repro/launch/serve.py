@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import hw
+from repro.core.ftl import registry as ftl_registry
 from repro.launch import kv_cache as KV
 from repro.models import model as M
 from repro.train import steps as S
@@ -85,6 +86,9 @@ class PlanCache:
         self.misses = 0
         self.warmed = False
         self.misses_after_warmup: list[tuple[str, int]] = []
+        # a global cache clear must not leave this wrapper claiming
+        # hits/warmth for plans the clear just dropped
+        ftl_registry.register_counter_reset(self)
 
     def get(self, m: int, phase: str):
         """(bucketed m, BlockPlan-or-None) for one lookup."""
@@ -115,6 +119,17 @@ class PlanCache:
             "misses": self.misses,
             "misses_after_warmup": len(self.misses_after_warmup),
         }
+
+    def reset_counters(self) -> None:
+        """Back to the just-constructed state — called by
+        ``registry.clear_plan_caches``.  The held plans are dropped too
+        (they were built by the caches the clear invalidated), so the
+        next lookup genuinely replans and the counters say so."""
+        self._plans.clear()
+        self.hits = 0
+        self.misses = 0
+        self.warmed = False
+        self.misses_after_warmup.clear()
 
 
 def _default_buckets(max_seq: int, block_size: int) -> tuple[int, ...]:
@@ -197,6 +212,14 @@ class ServeEngine:
             "ftl_target": self.target.name,
             "block_exec": "n/a",
         }
+        ftl_registry.register_counter_reset(self)
+
+    def reset_counters(self) -> None:
+        """Called by ``registry.clear_plan_caches``: the decode-replan
+        counter tracks misses of the (just-reset) plan cache, so it must
+        restart with it or ``plan_report`` would blame post-clear replans
+        on steady-state serving."""
+        self.stats["replans"] = 0
 
     # ------------------------------------------------------------------
     # plan-aware step builders
@@ -240,7 +263,6 @@ class ServeEngine:
 
         pre = entry(self.block_plan, self.buckets[-1])
         dec = entry(self.decode_plan, 1)
-        from repro.core.ftl import registry as ftl_registry
         return {
             "target": self.target.name,
             "buckets": list(self.buckets),

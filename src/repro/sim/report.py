@@ -105,7 +105,7 @@ def chain_timeline(chain, *, max_steps: int = 4) -> str:
     return "\n\n".join(parts)
 
 
-def to_chrome_trace(chain) -> dict:
+def to_chrome_trace(chain, *, measured=None) -> dict:
     """Replay a chain (or ``BlockPlan``, or a single :class:`Schedule`)
     and export the event timeline as Chrome-tracing JSON — loadable in
     Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
@@ -115,6 +115,13 @@ def to_chrome_trace(chain) -> dict:
     are laid out sequentially (each repeated segment is traced once; its
     remaining repeats are summarized by a counter in the event args).
     Timestamps/durations are microseconds, the format's native unit.
+
+    ``measured`` adds a second **measured** track for calibration
+    eyeballing: each entry — a ``repro.calib.Measurement`` or a plain
+    ``(name, seconds)`` pair — is rendered as one span, laid out
+    sequentially from t=0 alongside the simulated tracks, so the
+    modeled-vs-measured residual is literally the length mismatch
+    between the tracks in Perfetto.
     """
     if isinstance(chain, Schedule):
         lowered: tuple = ((chain, 1),)
@@ -163,6 +170,24 @@ def to_chrome_trace(chain) -> dict:
                 "args": args,
             })
         t0 += res.runtime_s * rep
+    if measured:
+        tid = tids.setdefault("measured", len(tids))
+        tm = 0.0
+        for entry in measured:
+            if hasattr(entry, "measured_s"):     # calib.Measurement
+                nm, secs = entry.name, float(entry.measured_s)
+                args = {"kind": getattr(entry, "kind", "measured")}
+            else:
+                nm, secs = entry[0], float(entry[1])
+                args = {}
+            events.append({
+                "name": nm, "ph": "X", "pid": 0, "tid": tid,
+                "ts": 1e6 * tm, "dur": 1e6 * secs,
+                "cat": "measured",
+                "args": {**args, "measured_ms": 1e3 * secs,
+                         "modeled_ms": 1e3 * t0},
+            })
+            tm += secs
     meta = [
         {"name": "process_name", "ph": "M", "pid": 0,
          "args": {"name": f"{name} on {target.name}"}},
@@ -174,12 +199,12 @@ def to_chrome_trace(chain) -> dict:
     return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
 
 
-def write_chrome_trace(chain, path) -> None:
+def write_chrome_trace(chain, path, *, measured=None) -> None:
     """``to_chrome_trace`` serialized to ``path``."""
     import json
 
     with open(path, "w") as f:
-        json.dump(to_chrome_trace(chain), f)
+        json.dump(to_chrome_trace(chain, measured=measured), f)
 
 
 __all__ = ["compare_plan", "sim_rows", "timeline", "chain_timeline",

@@ -275,3 +275,36 @@ def test_zero_replans_and_both_phase_executors(setup):
         assert set(entry["executors"]) == {"gemm", "attention", "mlp"}
     assert report["prefill"]["m"] == max(eng.buckets)
     assert report["decode"]["m"] == 1
+
+
+def test_clear_plan_caches_resets_serve_counters(setup):
+    """Regression: ``registry.clear_plan_caches()`` used to drop the 13
+    lru caches but leave the engine's PlanCache counters and replan stat
+    standing, so ``plan_report`` claimed reuse of plans the clear had
+    invalidated.  A clear must reset hits/misses/warmth/replans with the
+    caches — and the engine must still serve afterwards (replanning,
+    and saying so)."""
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32, eos_id=-1)
+    assert eng.plans.counters()["plans"] > 0    # warmed at construction
+    assert eng.plans.warmed
+
+    ftl_registry.clear_plan_caches()
+    c = eng.plans.counters()
+    assert c == {"plans": 0, "hits": 0, "misses": 0,
+                 "misses_after_warmup": 0}
+    assert not eng.plans.warmed
+    assert eng.stats["replans"] == 0
+    # the ledger itself reset too
+    for stats in ftl_registry.plan_cache_stats().values():
+        assert stats["hits"] == 0 and stats["misses"] == 0
+
+    # serving after a clear replans cleanly: fresh plan objects, honest
+    # miss counters (not misses_after_warmup — warmth was reset too)
+    prompt = rng.integers(2, cfg.vocab_size, size=6).astype(np.int32)
+    done = eng.run([Request(0, prompt, 3)], {})
+    assert len(done) == 1 and len(done[0].out) == 3
+    c = eng.plans.counters()
+    assert c["plans"] > 0 and c["misses"] > 0
+    assert c["misses_after_warmup"] == 0

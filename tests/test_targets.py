@@ -122,8 +122,8 @@ class TestDetectTarget:
     def test_default_target_uses_detection(self, monkeypatch):
         """default_target resolution: set_default_target override, then
         FTL_TARGET, then the (memoized) device detection."""
-        monkeypatch.setattr(hw, "_DETECTED",
-                            [hw.detect_target([_FakeDev("tpu", "TPU v4")])])
+        detected = hw.detect_target([_FakeDev("tpu", "TPU v4")])
+        monkeypatch.setattr(hw, "_RESOLVED", {None: detected})
         monkeypatch.setattr(hw, "_DEFAULT", [None])
         monkeypatch.delenv("FTL_TARGET", raising=False)
         assert hw.default_target().name == "tpu_v4"
@@ -142,12 +142,38 @@ class TestDetectTarget:
             calls.append(1)
             return hw.CPU_CACHE
 
-        monkeypatch.setattr(hw, "_DETECTED", [None])
+        monkeypatch.setattr(hw, "_RESOLVED", {})
         monkeypatch.setattr(hw, "detect_target", fake_detect)
         monkeypatch.delenv("FTL_TARGET", raising=False)
         hw.default_target()
         hw.default_target()
         assert len(calls) == 1
+
+    def test_env_flip_mid_process_takes_effect(self, monkeypatch):
+        """Regression: the resolution memo must be keyed by the env
+        state — flipping FTL_TARGET after the first lookup (or clearing
+        it back to detection) must change the answer, not be shadowed by
+        the first memoized resolution."""
+        monkeypatch.setattr(hw, "_RESOLVED", {})
+        monkeypatch.setattr(hw, "_DEFAULT", [None])
+        monkeypatch.setattr(hw, "detect_target",
+                            lambda devices=None: hw.CPU_CACHE)
+        monkeypatch.delenv("FTL_TARGET", raising=False)
+        assert hw.default_target() is hw.CPU_CACHE   # memoizes detection
+        monkeypatch.setenv("FTL_TARGET", "rv32_npu")
+        assert hw.default_target().name == "rv32_npu"
+        monkeypatch.setenv("FTL_TARGET", "tpu_v5e")
+        assert hw.default_target().name == "tpu_v5e"
+        monkeypatch.delenv("FTL_TARGET")
+        assert hw.default_target() is hw.CPU_CACHE   # back to detection
+        # set_default_target clears the memo: a later un-override
+        # re-resolves rather than serving the pre-override memo entry
+        hw.set_default_target("rv32_l1_l2")
+        try:
+            assert hw.default_target().name == "rv32_l1_l2"
+        finally:
+            hw.set_default_target(None)
+        assert hw.default_target() is hw.CPU_CACHE
 
 
 # ---------------------------------------------------------------------------
