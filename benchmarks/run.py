@@ -24,9 +24,10 @@ def _write_status(results: list[dict]) -> None:
 
 def main() -> None:
     from . import (bench_attention, bench_autotune, bench_block,
-                   bench_calibrate, bench_mesh, bench_paper_mlp,
-                   bench_roofline, bench_schedule, bench_serve,
-                   bench_solver, bench_targets, bench_tpu_mlp)
+                   bench_calibrate, bench_mesh, bench_obs,
+                   bench_paper_mlp, bench_roofline, bench_schedule,
+                   bench_serve, bench_solver, bench_targets,
+                   bench_tpu_mlp)
 
     sections = [
         ("targets: per-level traffic across memory hierarchies + gate",
@@ -49,6 +50,8 @@ def main() -> None:
          bench_mesh.main),
         ("calibrate: fitted Target constants + modeled-vs-measured "
          "drift gate", bench_calibrate.main),
+        ("obs: telemetry overhead + online drift monitor + gates",
+         bench_obs.main),
         ("roofline: dry-run artifacts (per arch x shape x mesh)",
          bench_roofline.main),
     ]

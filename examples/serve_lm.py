@@ -15,7 +15,15 @@ Extra flags pass straight through to ``repro.launch.serve``:
                            (default: everything arrives at t=0)
   --trace decode.json      Chrome-tracing timeline of the decode plan's
                            simulated schedule (load in Perfetto or
-                           chrome://tracing)
+                           chrome://tracing); with --obs it becomes the
+                           merged live+modeled timeline, written post-run
+  --obs                    runtime telemetry: lifecycle spans, queue/KV
+                           gauges, the online drift monitor
+  --obs-trace live.json    merged live+modeled Perfetto timeline
+                           (implies --obs; must differ from --trace —
+                           the same path is rejected, not overwritten)
+  --obs-metrics serve.prom Prometheus text exposition of the metrics
+                           registry (implies --obs)
   --target rv32_npu        plan for a specific memory-hierarchy preset
   --block-size 16          paged-KV page length; --dense-kv disables
                            paging

@@ -9,12 +9,17 @@ the real config (a few hundred steps on a v5e slice: point --mesh at it
 via launch/train.py, which shares this code path).
 
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 60]
+
+``--obs-metrics train.prom`` turns on runtime telemetry (train_step
+spans, straggler/heartbeat metrics — see README "Observability") and
+writes the Prometheus exposition after the run.
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim import OptConfig
@@ -36,7 +41,11 @@ def main() -> None:
     ap.add_argument("--preset", default="cpu", choices=list(PRESETS))
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--obs-metrics", default=None,
+                    help="write Prometheus metrics here (enables spans)")
     args = ap.parse_args()
+    if args.obs_metrics:
+        obs.enable()
 
     p = PRESETS[args.preset]
     cfg = ModelConfig(
@@ -75,6 +84,9 @@ def main() -> None:
     print(f"\nfinal loss {last['loss']:.4f} "
           f"(entropy floor {data.optimal_nll():.4f}); "
           f"straggler flags: {len(loop.monitor.flagged_steps)}")
+    if args.obs_metrics:
+        obs.write_prometheus(args.obs_metrics)
+        print(f"wrote metrics to {args.obs_metrics}")
 
 
 if __name__ == "__main__":

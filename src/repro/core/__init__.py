@@ -1,6 +1,19 @@
 """Core: the paper's primary contribution (Fused-Tiled Layers) and the
-memory-hierarchy targets every planner prices against."""
+memory-hierarchy targets every planner prices against.
+
+``ftl`` is re-exported lazily (PEP 562): it transitively imports jax,
+and jax-free consumers — ``repro.obs``, ``repro.calib``'s record types,
+offline tooling — must be able to reach ``repro.core.hw`` without
+paying (or requiring) the jax import.
+"""
 from . import hw  # noqa: F401  (import order: hw has no ftl dependency)
-from . import ftl
 
 __all__ = ["ftl", "hw"]
+
+
+def __getattr__(name):
+    if name == "ftl":
+        import importlib
+
+        return importlib.import_module(".ftl", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -29,7 +29,20 @@ from typing import Any
 
 import jax.numpy as jnp
 
+from repro import obs
+
 from . import registry
+
+# runtime-fallback telemetry: how often a plan's binding had to be
+# rebound at run time, and how often the rebind landed on an XLA
+# reference executor (the worst-case fallback the contract promises)
+_C_REQUALIFIED = obs.counter(
+    "ftl_requalified_total",
+    "bindings rebound at run time (plan executor no longer qualified)",
+    ("kind",))
+_C_XLA_FALLBACK = obs.counter(
+    "ftl_xla_fallback_total",
+    "runtime rebinds that landed on an XLA reference executor", ("kind",))
 
 
 def _runtime_ctx(
@@ -86,13 +99,20 @@ def _stage_executor(
     when it no longer qualifies — planned on another platform, shapes
     changed — ``registry.find`` rebinds the best qualifying executor.
     """
+    bound = None
     for b in plan.bindings:
         if b.kind == kind:
             ex = registry.get(b.executor)
             if ex.qualifies(ctx):
                 return ex
+            bound = b.executor
             break
-    return registry.find(kind, ctx)
+    fb = registry.find(kind, ctx)
+    if bound is not None and fb.name != bound:
+        _C_REQUALIFIED.labels(kind=kind).inc()
+        if fb.backend == "xla":
+            _C_XLA_FALLBACK.labels(kind=kind).inc()
+    return fb
 
 
 def _bind_target(ex: registry.Executor, target) -> registry.Executor:
@@ -245,32 +265,35 @@ def run_block(
     dtype = str(x.dtype)
     mode = ftl_mode if ftl_mode is not None else cfg.ftl_mode
 
+    # Per-stage spans carry the *resolved* executor in the name.  Under
+    # jax.jit these time the trace/lowering of the stage, not device
+    # execution (XLA fuses across stage boundaries); on the eager path
+    # (and on every re-trace) they are the stage's wall-clock.
     if "attn" in params:
         nh, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
         if positions is None:
             positions = jnp.arange(s)
         gemm_ex = _resolve_gemm(plan, mode, s, dtype)
-        ap = params["attn"]
-        h = L.norm(params["ln1"], x, cfg.norm)
-        q = L._split_heads(_project(gemm_ex, h, ap["wq"]), nh)
-        k = L._split_heads(_project(gemm_ex, h, ap["wk"]), hk)
-        v = L._split_heads(_project(gemm_ex, h, ap["wv"]), hk)
-        if use_rope:
-            q = L.rope(q, positions, cfg.rope_theta)
-            k = L.rope(k, positions, cfg.rope_theta)
-        q = constrain(q.transpose(0, 2, 1, 3), "heads_q")
-        k = constrain(k.transpose(0, 2, 1, 3), "heads_kv")
-        v = constrain(v.transpose(0, 2, 1, 3), "heads_kv")
         attn_ex = _resolve_attention(plan, mode, s, dtype)
-        o = attn_ex.run(q, k, v, causal=causal, window=window)
-        o = o.transpose(0, 2, 1, 3).reshape(b, s, nh * dh)
-        x = constrain(x + _project(gemm_ex, o, ap["wo"]), "residual")
+        with obs.span(f"seg:attn:{attn_ex.name}", "exec"):
+            ap = params["attn"]
+            h = L.norm(params["ln1"], x, cfg.norm)
+            q = L._split_heads(_project(gemm_ex, h, ap["wq"]), nh)
+            k = L._split_heads(_project(gemm_ex, h, ap["wk"]), hk)
+            v = L._split_heads(_project(gemm_ex, h, ap["wv"]), hk)
+            if use_rope:
+                q = L.rope(q, positions, cfg.rope_theta)
+                k = L.rope(k, positions, cfg.rope_theta)
+            q = constrain(q.transpose(0, 2, 1, 3), "heads_q")
+            k = constrain(k.transpose(0, 2, 1, 3), "heads_kv")
+            v = constrain(v.transpose(0, 2, 1, 3), "heads_kv")
+            o = attn_ex.run(q, k, v, causal=causal, window=window)
+            o = o.transpose(0, 2, 1, 3).reshape(b, s, nh * dh)
+            x = constrain(x + _project(gemm_ex, o, ap["wo"]), "residual")
 
     if "mlp" in params:
         mp = params["mlp"]
         w1, w2 = mp["w1"]["w"], mp["w2"]["w"]
-        wg = mp.get("wg", {}).get("w")
-        h = L.norm(params["ln2"], x, cfg.norm)
         mlp_ex = _resolve_mlp(
             plan,
             mode,
@@ -278,17 +301,20 @@ def run_block(
             dtype,
             d_model=w1.shape[0],
             d_ff=w1.shape[1],
-            gated=wg is not None,
+            gated=mp.get("wg", {}).get("w") is not None,
         )
-        y = mlp_ex.run(
-            h,
-            w1,
-            w2,
-            wg,
-            mp["w1"].get("b"),
-            mp["w2"].get("b"),
-            act=cfg.mlp_act,
-        )
-        x = constrain(x + y, "residual")
+        with obs.span(f"seg:mlp:{mlp_ex.name}", "exec"):
+            wg = mp.get("wg", {}).get("w")
+            h = L.norm(params["ln2"], x, cfg.norm)
+            y = mlp_ex.run(
+                h,
+                w1,
+                w2,
+                wg,
+                mp["w1"].get("b"),
+                mp["w2"].get("b"),
+                act=cfg.mlp_act,
+            )
+            x = constrain(x + y, "residual")
 
     return x

@@ -34,11 +34,22 @@ import dataclasses
 import functools
 from typing import Iterable, Mapping
 
+from repro import obs
 from repro.core import hw as hwlib
 
 from .graph import OpGraph
 from .plan import TilePlan
 from .solver import InfeasibleError, solve
+
+# planner telemetry (repro.obs): spans around the DP entry points (they
+# also time cache hits — a hit is a few-µs span, a miss a solver run)
+# and candidate-segment counters inside the pricing loop.
+_C_PRICED = obs.counter(
+    "ftl_planner_segments_priced_total",
+    "candidate segments priced by the tile solver", ("graph",))
+_C_INFEASIBLE = obs.counter(
+    "ftl_planner_segments_infeasible_total",
+    "candidate segments rejected as infeasible", ("graph",))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,13 +231,16 @@ def _solve_segment(
     sharded: tuple | None,
 ) -> Segment | None:
     """Price one segment; None when infeasible on the target."""
+    _C_PRICED.labels(graph=graph.name).inc()
     try:
-        plan = solve(
-            graph.group(lo, hi),
-            target=target,
-            sharded_sizes=dict(sharded) if sharded else None,
-        )
+        with obs.span(f"solve[{lo}:{hi}]", "planner"):
+            plan = solve(
+                graph.group(lo, hi),
+                target=target,
+                sharded_sizes=dict(sharded) if sharded else None,
+            )
     except InfeasibleError:
+        _C_INFEASIBLE.labels(graph=graph.name).inc()
         return None
     return Segment(lo=lo, hi=hi, repeat=graph.repeat(lo, hi), plan=plan)
 
@@ -287,7 +301,8 @@ def plan_chain(
     Σ_segment max(compute_time, transfer_time) with (traffic, DMA count,
     segment count) tie-breaks."""
     target = target if target is not None else hwlib.default_target()
-    return _plan_chain_cached(graph, target, _freeze(sharded_sizes))
+    with obs.span("plan_chain", "planner"):
+        return _plan_chain_cached(graph, target, _freeze(sharded_sizes))
 
 
 @functools.lru_cache(maxsize=64)
@@ -360,7 +375,9 @@ def plan_chain_top_k(
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
     target = target if target is not None else hwlib.default_target()
-    return _plan_chain_top_k_cached(graph, target, _freeze(sharded_sizes), k)
+    with obs.span("plan_chain_top_k", "planner"):
+        return _plan_chain_top_k_cached(graph, target,
+                                        _freeze(sharded_sizes), k)
 
 
 def plan_fixed(

@@ -30,11 +30,15 @@ from typing import Callable, Mapping
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import hw as hwlib
 
 from . import executor_xla, graph, partition
 from .partition import ChainPlan
 from .solver import InfeasibleError, solve
+
+_C_PLAN_BLOCK = obs.counter(
+    "ftl_plan_block_total", "plan_block calls", ("phase",))
 
 
 # ---------------------------------------------------------------------------
@@ -550,9 +554,11 @@ def plan_block(
         raise ValueError(f"phase must be 'prefill' or 'decode', "
                          f"got {phase!r}")
     target = target if target is not None else hwlib.default_target()
-    return _plan_block_cached(cfg, m, dtype, target,
-                              _freeze(sharded_sizes), platform(), residual,
-                              autotune, phase)
+    _C_PLAN_BLOCK.labels(phase=phase).inc()
+    with obs.span(f"plan_block:{phase}", "planner"):
+        return _plan_block_cached(cfg, m, dtype, target,
+                                  _freeze(sharded_sizes), platform(),
+                                  residual, autotune, phase)
 
 
 # ---------------------------------------------------------------------------
@@ -681,6 +687,27 @@ for _fn in (_mlp_kernel_footprint_fits, _partial_mlp_footprint_fits,
 for _fn in (partition._plan_chain_cached, partition._plan_chain_top_k_cached):
     register_plan_cache(f"partition.{_fn.__name__}", _fn)
 del _fn
+
+
+def _collect_plan_caches(reg) -> None:
+    """Pull-style re-expression of the PR-8 plan-cache ledger on the
+    metrics registry: :func:`plan_cache_stats` stays the canonical
+    bookkeeping (lru_cache's own counters), re-read at scrape time as
+    gauges — never double-counted on the hot path, and automatically in
+    sync with :func:`clear_plan_caches` resets."""
+    g_hits = reg.gauge("ftl_plan_cache_hits",
+                       "plan-cache hits (ledger snapshot)", ("cache",))
+    g_miss = reg.gauge("ftl_plan_cache_misses",
+                       "plan-cache misses (ledger snapshot)", ("cache",))
+    g_size = reg.gauge("ftl_plan_cache_size",
+                       "plan-cache entries (ledger snapshot)", ("cache",))
+    for name, row in plan_cache_stats().items():
+        g_hits.labels(cache=name).set(row["hits"])
+        g_miss.labels(cache=name).set(row["misses"])
+        g_size.labels(cache=name).set(row["size"])
+
+
+obs.register_collector(_collect_plan_caches)
 
 
 # ---------------------------------------------------------------------------

@@ -33,18 +33,25 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+import weakref
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obslib
 from repro.configs import get_config
 from repro.core import hw
 from repro.core.ftl import registry as ftl_registry
 from repro.launch import kv_cache as KV
 from repro.models import model as M
 from repro.train import steps as S
+
+# how often an obs-enabled engine samples a decode step into the drift
+# monitor (report-only rows; whole-block rows come from
+# execute_block_plan and are the ones benches gate on)
+_DRIFT_SAMPLE_EVERY = 16
 
 
 @dataclasses.dataclass
@@ -153,7 +160,10 @@ class ServeEngine:
                  eos_id: int = 1, target: hw.Target | None = None,
                  block_size: int = 8, paged: bool | None = None,
                  kv_blocks: int | None = None,
-                 buckets: tuple[int, ...] | None = None):
+                 buckets: tuple[int, ...] | None = None,
+                 obs: bool = False,
+                 drift_target: hw.Target | None = None,
+                 drift_band: tuple[float, float] | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -213,6 +223,65 @@ class ServeEngine:
             "block_exec": "n/a",
         }
         ftl_registry.register_counter_reset(self)
+
+        # telemetry (repro.obs): span recording + per-step gauges + the
+        # online drift monitor, all opt-in — a bare engine pays nothing.
+        self.obs = bool(obs)
+        self.drift = None
+        if self.obs:
+            obslib.enable()
+            self.drift = obslib.DriftMonitor(
+                target=drift_target if drift_target is not None
+                else self.target,
+                **({"band": drift_band} if drift_band else {}))
+            self._g_active = obslib.gauge(
+                "serve_active_slots", "slots currently decoding")
+            self._g_queue = obslib.gauge(
+                "serve_queue_depth", "requests waiting for a slot")
+            self._g_kv_free = obslib.gauge(
+                "serve_kv_free_blocks", "paged-KV free physical blocks")
+            self._g_kv_occ = obslib.gauge(
+                "serve_kv_page_occupancy",
+                "fraction of the paged-KV pool in use")
+            self._c_evict = obslib.counter(
+                "serve_evictions_total", "slots freed (EOS/max-len)")
+            self._h_step = obslib.histogram(
+                "serve_decode_step_seconds", "wall-clock per decode step")
+            self._register_obs_collector()
+
+    def _register_obs_collector(self) -> None:
+        """Re-express ``plan_report()``/``stats`` on the metrics registry
+        at collect time.  Weakly bound: a dead engine's collector is a
+        no-op, never a leak."""
+        ref = weakref.ref(self)
+
+        def _collect(reg) -> None:
+            eng = ref()
+            if eng is None:
+                return
+            g_stat = reg.gauge("serve_stats",
+                               "ServeEngine.stats re-expressed", ("stat",))
+            for k in ("prefills", "decode_steps", "tokens", "replans"):
+                g_stat.labels(stat=k).set(eng.stats[k])
+            g_pc = reg.gauge("serve_plan_cache",
+                             "serving PlanCache counters", ("field",))
+            for k, v in eng.plans.counters().items():
+                g_pc.labels(field=k).set(v)
+            rep = eng.plan_report()
+            g_plan = reg.gauge(
+                "serve_plan_segments",
+                "planned segments per serving regime (0 = no plan)",
+                ("phase", "schedule"))
+            for phase in ("prefill", "decode"):
+                e = rep[phase]
+                if e is not None:
+                    g_plan.labels(phase=phase, schedule=e["schedule"]) \
+                        .set(len(e["cuts"]) + 1)
+            reg.gauge("serve_decode_differs_from_prefill",
+                      "1 when the decode DP picked different cuts") \
+                .set(float(rep["decode_differs_from_prefill"]))
+
+        obslib.register_collector(_collect)
 
     def reset_counters(self) -> None:
         """Called by ``registry.clear_plan_caches``: the decode-replan
@@ -328,8 +397,9 @@ class ServeEngine:
             self.block_plan, p, xx, positions=positions, window=window))
         run(x).block_until_ready()              # compile
         t0 = time.perf_counter()
-        y = run(x)
-        y.block_until_ready()
+        with obslib.span("serve:block_exec", "exec"):
+            y = run(x)
+            y.block_until_ready()
         dt = time.perf_counter() - t0
         entry = {
             "ms": round(1e3 * dt, 3),
@@ -338,6 +408,12 @@ class ServeEngine:
             "finite": bool(jnp.isfinite(y).all()),
         }
         self.stats["block_exec"] = entry
+        if self.drift is not None:
+            # the gated drift feed: a whole planned block, wall-clocked
+            # at the serving shape — the same regime bench_calibrate's
+            # block rows measure
+            entry["drift_ratio"] = self.drift.observe_chain(
+                self.block_plan, dt, name="block_exec", kind="block")
         return entry
 
     def _first_block_params(self):
@@ -384,9 +460,11 @@ class ServeEngine:
             raise ValueError(f"request {req.rid}: prompt of {plen} tokens "
                              f"exceeds the largest bucket "
                              f"{self.buckets[-1]}")
+        obslib.begin("serve:admit", "serve")
         bucket, plan = self.plans.get(plen, "prefill")
         req.bucket = bucket
         if self.paged and not self.kv.allocate(slot, bucket):
+            obslib.end()
             return False
 
         padded = np.zeros(bucket, np.int32)
@@ -395,7 +473,9 @@ class ServeEngine:
         fn = self._prefill_fn(bucket, plan)
         # bucket padding is on the right; the prompt's real last token
         # sits at plen-1 and decode overwrites the pad KV in place
-        logits, cache1 = fn(self.params, batch, jnp.int32(plen - 1))
+        with obslib.span(f"serve:prefill:m{bucket}", "serve"):
+            logits, cache1 = fn(self.params, batch, jnp.int32(plen - 1))
+            logits.block_until_ready()
 
         if self.paged:
             self.kv.write_prefill(slot, cache1, bucket)
@@ -429,18 +509,24 @@ class ServeEngine:
         self.stats["prefills"] += 1
         adm = self.stats["bucket_admissions"]
         adm[bucket] = adm.get(bucket, 0) + 1
+        obslib.end()  # serve:admit
         return True
 
     # ------------------------------------------------------------------
     def _evict(self, slot: int) -> None:
-        self.active[slot] = None
-        self.pos[slot] = 0
-        if self.paged:
-            self.kv.release(slot)
+        with obslib.span("serve:evict", "serve"):
+            self.active[slot] = None
+            self.pos[slot] = 0
+            if self.paged:
+                self.kv.release(slot)
+        if self.obs:
+            self._c_evict.inc()
 
     def step(self):
         """One batched decode step for all active slots (each at its own
         position)."""
+        t_step = time.perf_counter() if self.obs else 0.0
+        obslib.begin("serve:decode_step", "serve")
         # steady-state plan lookup: after warmup this always hits; a miss
         # (or a changed plan object) would force a re-jit — counted as a
         # replan, and gated to zero in bench_serve
@@ -499,6 +585,28 @@ class ServeEngine:
                 r.done = True
                 r.t_done = now
         self.stats["decode_steps"] += 1
+        obslib.end()  # serve:decode_step
+        if self.obs:
+            self._observe_step(time.perf_counter() - t_step)
+
+    def _observe_step(self, dt: float) -> None:
+        """Per-step gauges + a sampled drift row (obs-enabled engines)."""
+        self._h_step.observe(dt)
+        self._g_active.set(sum(1 for r in self.active
+                               if r is not None and not r.done))
+        if self.paged:
+            free = self.kv.free_blocks
+            self._g_kv_free.set(free)
+            self._g_kv_occ.set(1.0 - free / max(self.kv.num_blocks, 1))
+        if (self.drift is not None and self.decode_plan is not None
+                and self.stats["decode_steps"] % _DRIFT_SAMPLE_EVERY == 0):
+            # report-only row: a decode step runs the per-block plan
+            # n_layers times (plus head/dispatch the model never charges
+            # the block plan for), so scale the modeled side to match.
+            # Whole-block rows from execute_block_plan are the gated ones.
+            self.drift.observe_chain(
+                self.decode_plan, dt, name="decode_step", kind="decode",
+                scale=max(self.cfg.n_layers, 1))
 
     def run(self, requests: list[Request], extras: dict[str, Any],
             arrivals: list[float] | None = None):
@@ -522,6 +630,8 @@ class ServeEngine:
         done: list[Request] = []
         while queue or any(r is not None for r in self.active):
             now = time.perf_counter()
+            if self.obs:
+                self._g_queue.set(len(queue))
             admitted_any = False
             for i in range(self.slots):
                 r = self.active[i]
@@ -589,8 +699,25 @@ def main() -> None:
                     "default: all requests arrive at t=0")
     ap.add_argument("--trace", default=None,
                     help="write a Chrome-tracing timeline of the decode "
-                    "plan's simulated schedule to this path")
+                    "plan's simulated schedule to this path (with --obs: "
+                    "the merged live+modeled timeline, written post-run)")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable runtime telemetry (spans, gauges, the "
+                    "online drift monitor)")
+    ap.add_argument("--obs-trace", default=None,
+                    help="write the merged live+modeled Perfetto "
+                    "timeline to this path after the run (implies --obs)")
+    ap.add_argument("--obs-metrics", default=None,
+                    help="write a Prometheus text exposition of the "
+                    "metrics registry to this path after the run "
+                    "(implies --obs)")
     args = ap.parse_args()
+    if args.obs_trace or args.obs_metrics:
+        args.obs = True
+    if args.trace and args.obs_trace and args.trace == args.obs_trace:
+        ap.error("--trace and --obs-trace point at the same path "
+                 f"({args.trace}); they would silently overwrite each "
+                 "other — give them distinct paths")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -616,7 +743,8 @@ def main() -> None:
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
                       max_seq=args.max_seq, target=target,
                       block_size=args.block_size,
-                      paged=False if args.dense_kv else None)
+                      paged=False if args.dense_kv else None,
+                      obs=args.obs)
     report = eng.plan_report()
     print(f"FTL serving plans on {report['target']} "
           f"(buckets {report['buckets']}, "
@@ -641,7 +769,10 @@ def main() -> None:
             print(f"block plan executed @ m={args.max_seq}: "
                   f"{exec_stats['ms']} ms, executors "
                   f"{exec_stats['executors']}")
-    if args.trace:
+    if args.trace and not args.obs:
+        # modeled-only timeline (pre-run: it needs no live spans); with
+        # --obs the trace is written post-run as the merged live+modeled
+        # view instead
         from repro.sim import write_chrome_trace
         plan = eng.decode_plan or eng.block_plan
         if plan is not None:
@@ -669,6 +800,22 @@ def main() -> None:
           f"warmup), {eng.stats['replans']} decode replans")
     for r in done[:3]:
         print(f"  req {r.rid}: {len(r.out)} tokens: {r.out[:10]}...")
+
+    if args.obs:
+        if eng.drift is not None and eng.drift.n_observed:
+            st = eng.drift.status()
+            print(f"drift monitor on {st['target']}: geomean "
+                  f"modeled/measured {st['geomean_ratio']:.3f} "
+                  f"({'in' if st['in_band'] else 'OUT OF'} band "
+                  f"{tuple(st['band'])}, {st['n_observed']} observations)")
+        plan = eng.decode_plan or eng.block_plan
+        for path in (args.obs_trace, args.trace):
+            if path:
+                obslib.write_merged_trace(path, chain=plan)
+                print(f"merged live+modeled timeline written to {path}")
+        if args.obs_metrics:
+            obslib.write_prometheus(args.obs_metrics)
+            print(f"Prometheus metrics written to {args.obs_metrics}")
 
 
 if __name__ == "__main__":

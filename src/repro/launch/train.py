@@ -27,6 +27,7 @@ import logging
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obslib
 from repro.configs import get_config
 from repro.core.ftl import InfeasibleError, executor_block
 from repro.core.ftl import registry as ftl_registry
@@ -34,6 +35,7 @@ from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.optim import OptConfig
 from repro.runtime import LoopConfig, TrainLoop
+from repro.runtime.monitor import HeartbeatMonitor
 from repro.train import steps as S
 
 
@@ -92,7 +94,15 @@ def build(args):
         vocab_size=cfg.vocab_size, global_batch=args.batch,
         seq_len=args.seq, seed=args.seed, kind=args.data))
 
+    # liveness: stamp a heartbeat at the top of every step (make_batch is
+    # the first per-step call) so peers on a shared filesystem can spot a
+    # hung process even when on_metrics only fires every log_every steps
+    hb = (HeartbeatMonitor(args.heartbeat_dir, jax.process_index())
+          if getattr(args, "heartbeat_dir", None) else None)
+
     def make_batch(i: int):
+        if hb is not None:
+            hb.stamp()
         return {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
 
     loop = TrainLoop(
@@ -106,6 +116,7 @@ def build(args):
             flush=True),
     )
     loop.block_plan = bp          # surfaced for tooling/tests
+    loop.heartbeat = hb
     return loop
 
 
@@ -130,13 +141,49 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--obs", action="store_true",
+                    help="runtime telemetry: train_step spans + straggler/"
+                         "heartbeat metrics on the repro.obs registry")
+    ap.add_argument("--obs-trace", default=None,
+                    help="merged live+modeled Chrome-tracing JSON "
+                         "(implies --obs)")
+    ap.add_argument("--obs-metrics", default=None,
+                    help="Prometheus text exposition written post-run "
+                         "(implies --obs)")
+    ap.add_argument("--heartbeat-dir", default=None,
+                    help="shared dir for per-process heartbeat stamps")
     args = ap.parse_args()
+    if args.obs_trace or args.obs_metrics:
+        args.obs = True
+    if args.obs:
+        obslib.enable()
 
     loop = build(args)
     loop.run()
     if loop.metrics_log:
         last = loop.metrics_log[-1]
         print(f"final: step {last['step']} loss {last.get('loss'):.4f}")
+
+    # straggler summary: TrainLoop's monitor flagged these live (and the
+    # obs registry carries the counters); echo them so a smoke run shows
+    # the wiring without scraping
+    flagged = loop.monitor.flagged_steps
+    if flagged:
+        worst = max(flagged, key=lambda s: s.seconds)
+        print(f"stragglers: {len(flagged)} flagged step(s), worst "
+              f"step {worst.step} at {worst.seconds:.3f}s "
+              f"(ema {loop.monitor.ema:.3f}s)")
+    elif args.obs:
+        print(f"stragglers: none flagged over {len(loop.monitor.history)} "
+              f"steps (ema {loop.monitor.ema:.3f}s)"
+              if loop.monitor.ema is not None else "stragglers: no steps ran")
+
+    if args.obs_trace:
+        obslib.write_merged_trace(args.obs_trace, chain=loop.block_plan)
+        print(f"wrote merged trace to {args.obs_trace}")
+    if args.obs_metrics:
+        obslib.write_prometheus(args.obs_metrics)
+        print(f"wrote metrics to {args.obs_metrics}")
 
 
 if __name__ == "__main__":

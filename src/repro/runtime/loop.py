@@ -17,6 +17,7 @@ from typing import Any, Callable
 
 import jax
 
+from repro import obs
 from repro.ckpt import CheckpointManager
 from repro.runtime.monitor import StragglerMonitor
 
@@ -103,9 +104,10 @@ class TrainLoop:
             while step < self.cfg.total_steps and not self._preempted:
                 batch = self.make_batch(step)
                 self.monitor.start_step()
-                self.state, metrics = self.step_fn(self.state, batch)
-                # block on the loss so wall time covers the step
-                metrics = {k: float(v) for k, v in metrics.items()}
+                with obs.span(f"train_step:{step}", "train"):
+                    self.state, metrics = self.step_fn(self.state, batch)
+                    # block on the loss so wall time covers the step
+                    metrics = {k: float(v) for k, v in metrics.items()}
                 stat = self.monitor.end_step(step)
                 if stat.flagged:
                     log.warning("straggler: step %d took %.3fs (ema %.3fs)",

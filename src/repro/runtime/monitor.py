@@ -11,12 +11,32 @@ trigger an elastic restart (runtime/loop.py handles the restart half).
 older than ``timeout``.  File-based so it works on any shared filesystem
 without a side-channel service; swap ``stamp``/``stale_peers`` for your
 RPC of choice on clusters with a coordinator.
+
+Both monitors emit through :mod:`repro.obs.metrics`: flagged-step
+counter + per-step seconds gauge (straggler), stamp counter +
+oldest-peer-heartbeat-age gauge (liveness) — so a scrape of the metrics
+registry shows cluster health next to the serving/planning telemetry.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import time
+
+from repro import obs
+
+_C_FLAGGED = obs.counter(
+    "train_straggler_flagged_total",
+    "steps flagged slower than threshold x the EMA")
+_G_STEP = obs.gauge(
+    "train_step_seconds", "wall-clock of the last training step")
+_G_EMA = obs.gauge(
+    "train_step_seconds_ema", "EMA of unflagged step wall-clock")
+_C_STAMPS = obs.counter(
+    "train_heartbeat_stamps_total", "heartbeats written by this process")
+_G_HB_AGE = obs.gauge(
+    "train_heartbeat_oldest_age_seconds",
+    "age of the oldest peer heartbeat at the last stale_peers() scan")
 
 
 @dataclasses.dataclass
@@ -51,6 +71,11 @@ class StragglerMonitor:
             self.ema = 0.9 * self.ema + 0.1 * dt
         stat = StepStat(step, dt, flagged)
         self.history.append(stat)
+        _G_STEP.set(dt)
+        if self.ema is not None:
+            _G_EMA.set(self.ema)
+        if flagged:
+            _C_FLAGGED.inc()
         return stat
 
     @property
@@ -70,10 +95,12 @@ class HeartbeatMonitor:
         path = os.path.join(self.dir, f"proc_{self.pi}")
         with open(path, "w") as f:
             f.write(str(time.time()))
+        _C_STAMPS.inc()
 
     def stale_peers(self) -> list[int]:
         now = time.time()
         stale = []
+        oldest_age = 0.0
         for name in os.listdir(self.dir):
             if not name.startswith("proc_"):
                 continue
@@ -82,6 +109,8 @@ class HeartbeatMonitor:
                     t = float(f.read().strip())
             except (OSError, ValueError):
                 continue
+            oldest_age = max(oldest_age, now - t)
             if now - t > self.timeout:
                 stale.append(int(name.split("_")[1]))
+        _G_HB_AGE.set(oldest_age)
         return sorted(stale)

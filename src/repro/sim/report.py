@@ -105,7 +105,7 @@ def chain_timeline(chain, *, max_steps: int = 4) -> str:
     return "\n\n".join(parts)
 
 
-def to_chrome_trace(chain, *, measured=None) -> dict:
+def to_chrome_trace(chain, *, measured=None, pid: int = 0) -> dict:
     """Replay a chain (or ``BlockPlan``, or a single :class:`Schedule`)
     and export the event timeline as Chrome-tracing JSON — loadable in
     Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
@@ -122,6 +122,11 @@ def to_chrome_trace(chain, *, measured=None) -> dict:
     sequentially from t=0 alongside the simulated tracks, so the
     modeled-vs-measured residual is literally the length mismatch
     between the tracks in Perfetto.
+
+    ``pid`` sets the Chrome-tracing process id of every emitted event,
+    so callers merging this timeline with other event sources
+    (``repro.obs.export.merged_chrome_trace`` puts live runtime spans on
+    their own pid) get disjoint track namespaces.
     """
     if isinstance(chain, Schedule):
         lowered: tuple = ((chain, 1),)
@@ -163,7 +168,7 @@ def to_chrome_trace(chain, *, measured=None) -> dict:
             if rep > 1:
                 args["repeat"] = rep
             events.append({
-                "name": nm, "ph": "X", "pid": 0, "tid": tid,
+                "name": nm, "ph": "X", "pid": pid, "tid": tid,
                 "ts": 1e6 * (t0 + start),
                 "dur": 1e6 * (finish - start),
                 "cat": track.split(":")[0],
@@ -181,7 +186,7 @@ def to_chrome_trace(chain, *, measured=None) -> dict:
                 nm, secs = entry[0], float(entry[1])
                 args = {}
             events.append({
-                "name": nm, "ph": "X", "pid": 0, "tid": tid,
+                "name": nm, "ph": "X", "pid": pid, "tid": tid,
                 "ts": 1e6 * tm, "dur": 1e6 * secs,
                 "cat": "measured",
                 "args": {**args, "measured_ms": 1e3 * secs,
@@ -189,10 +194,10 @@ def to_chrome_trace(chain, *, measured=None) -> dict:
             })
             tm += secs
     meta = [
-        {"name": "process_name", "ph": "M", "pid": 0,
+        {"name": "process_name", "ph": "M", "pid": pid,
          "args": {"name": f"{name} on {target.name}"}},
     ] + [
-        {"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
+        {"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
          "args": {"name": track}}
         for track, tid in sorted(tids.items(), key=lambda kv: kv[1])
     ]

@@ -39,6 +39,7 @@ import dataclasses
 import functools
 from typing import Mapping
 
+from repro import obs
 from repro.core import hw as hwlib
 from repro.core.ftl import cost as costlib
 from repro.core.ftl import partition as partlib
@@ -157,6 +158,15 @@ def tile_ladder(c: DimConstraint) -> tuple[int, ...]:
 #    per-level depths        ((level, depth), ...) — non-base only)
 Candidate = tuple[int, tuple, tuple, tuple]
 
+# beam telemetry: candidates generated by the move families, DES replays
+# actually spent, and candidates pruned as infeasible footprints
+_C_CANDIDATES = obs.counter(
+    "tune_candidates_total", "candidates generated by the move families")
+_C_REPLAYS = obs.counter(
+    "tune_replays_total", "DES replays spent scoring candidates")
+_C_INFEASIBLE = obs.counter(
+    "tune_infeasible_total", "candidates pruned (footprint no longer fits)")
+
 
 def _freeze_tiles(tiles: Mapping[str, int]) -> tuple:
     return tuple(sorted(tiles.items()))
@@ -231,8 +241,10 @@ class _Search:
         self.seq += 1
         chain = self._build(cand)
         if chain is None:
+            _C_INFEASIBLE.inc()
             self.scored[cand] = (self.seq, None, None)
             return None
+        _C_REPLAYS.inc()
         runtime = simulate_chain(lower_chain(chain)).runtime_s
         self.scored[cand] = (self.seq, runtime, chain)
         self.n_feasible += 1
@@ -244,6 +256,11 @@ class _Search:
 
     # -- move families ----------------------------------------------
     def moves(self, cand: Candidate) -> list[Candidate]:
+        out = self._moves(cand)
+        _C_CANDIDATES.inc(len(out))
+        return out
+
+    def _moves(self, cand: Candidate) -> list[Candidate]:
         pi, seg_tiles, seg_engines, depths = cand
         part = self.parts[pi]
         cfg = self.config
@@ -352,18 +369,19 @@ class _Search:
         frontier = sorted(
             (c for c in seeds if self.scored[c][1] is not None), key=rank
         )[:cfg.beam_width]
-        for _ in range(cfg.max_rounds):
+        for rnd in range(cfg.max_rounds):
             if self.n_scored >= cfg.max_sims:
                 break
             fresh: list[Candidate] = []
-            for cand in frontier:
-                for nxt in self.moves(cand):
-                    if nxt in self.scored:
-                        continue
-                    if self.n_scored >= cfg.max_sims:
-                        break
-                    if self.score(nxt) is not None:
-                        fresh.append(nxt)
+            with obs.span(f"autotune_round:{rnd}", "tune"):
+                for cand in frontier:
+                    for nxt in self.moves(cand):
+                        if nxt in self.scored:
+                            continue
+                        if self.n_scored >= cfg.max_sims:
+                            break
+                        if self.score(nxt) is not None:
+                            fresh.append(nxt)
             if not fresh:
                 break
             frontier = sorted(set(frontier) | set(fresh), key=rank)
@@ -415,8 +433,9 @@ def autotune_chain(
     """
     target = target if target is not None else hwlib.default_target()
     config = config if config is not None else AutotuneConfig()
-    return _autotune_cached(graph, target, config,
-                            partlib._freeze(sharded_sizes))
+    with obs.span("autotune_chain", "tune"):
+        return _autotune_cached(graph, target, config,
+                                partlib._freeze(sharded_sizes))
 
 
 __all__ = ["AutotuneConfig", "TuneResult", "autotune_chain", "tile_ladder"]
